@@ -1,0 +1,39 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+from repro.core.er_mapping import (
+    baseline_mapping,
+    er_mapping,
+    hierarchical_er_mapping,
+)
+from repro.core.hardware import DGX, NVL72, WSC
+from repro.core.simulator import ClusterSystem, WSCSystem
+from repro.core.topology import MeshTopology
+
+
+def wsc_system(rows, cols, dp, tp, mapping="er", n_wafers=1, hier=False):
+    topo = MeshTopology(rows, cols, n_wafers)
+    ctor = {
+        "baseline": baseline_mapping,
+        "er": er_mapping,
+        "her": hierarchical_er_mapping,
+    }[mapping]
+    return WSCSystem(WSC, ctor(topo, dp, tp), hierarchical=hier)
+
+
+def dgx_system(n_devices, tp=8):
+    return ClusterSystem(DGX, n_devices, tp=tp)
+
+
+def nvl72_system(tp=8):
+    return ClusterSystem(NVL72, 72, tp=tp)
+
+
+def row(name: str, us: float, derived: str) -> dict:
+    return {"name": name, "us_per_call": round(us, 3), "derived": derived}
+
+
+def comm_us(bd) -> float:
+    """Communication latency of one iteration (µs)."""
+    return (bd.allreduce + bd.alltoall) * 1e6

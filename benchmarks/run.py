@@ -1,0 +1,43 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import importlib
+import sys
+import time
+
+MODULES = [
+    "fig06_comm_imbalance",
+    "fig13a_token_count",
+    "fig13b_models",
+    "fig13c_scale_parallelism",
+    "fig13d_her",
+    "fig14a_esp",
+    "fig14b_allgather",
+    "fig15_load_traces",
+    "fig16_balancers",
+    "fig17_nvl72",
+    "roofline",
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] or None
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        if only and not any(o in modname for o in only):
+            continue
+        mod = importlib.import_module(f"benchmarks.{modname}")
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the harness running
+            print(f"{modname},-1,ERROR:{type(e).__name__}:{e}")
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        print(
+            f"# {modname}: {len(rows)} rows in {time.time() - t0:.1f}s",
+            file=sys.stderr,
+        )
+
+
+if __name__ == "__main__":
+    main()

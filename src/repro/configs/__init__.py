@@ -1,0 +1,59 @@
+"""Architecture registry: ``get_config(arch_id)`` for every ``--arch``."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeConfig,
+    shapes_for,
+    smoke,
+)
+
+_MODULES = {
+    "llama3.2-1b": "llama3_2_1b",
+    "qwen2-72b": "qwen2_72b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "deepseek-7b": "deepseek_7b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "dbrx-132b": "dbrx_132b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "xlstm-350m": "xlstm_350m",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "internvl2-76b": "internvl2_76b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}
+
+
+__all__ = [
+    "ARCHS",
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "get_config",
+    "all_configs",
+    "shapes_for",
+    "smoke",
+]

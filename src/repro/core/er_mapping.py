@@ -1,0 +1,251 @@
+"""Entwined Ring Mapping (paper Section IV).
+
+A *mapping* assigns every device of a 2-D mesh a (TP-group, rank) pair for
+the attention layers; the MoE layer's experts live one-per-device (or
+several, or sharded — that is orthogonal to the mapping and handled by the
+cost/compute models).
+
+Two placements are implemented:
+
+* ``baseline_mapping`` — each TP group occupies a contiguous block of the
+  mesh (the standard cluster practice the paper compares against,
+  Fig. 8(b)). FTDs are the sets of devices at equal block offsets: large
+  bounding boxes that all overlap in the mesh centre.
+* ``er_mapping`` — TP groups are entwined: the mesh is cut into compact
+  tiles of ``dp`` devices, each tile holding exactly one member of every TP
+  group (Fig. 8(c)). Each tile *is* an FTD: minimal area, zero overlap. The
+  TP all-reduce becomes entwined multi-hop rings over tiles (Fig. 8(d)).
+
+``hierarchical`` (HER-Mapping, Fig. 10(c)) splits the all-reduce of
+multi-wafer systems into intra-wafer reduce-scatter + inter-wafer
+all-gather; the placement is per-wafer ER with groups striped across
+wafers. The ``Mapping`` object only records placement + ring schedules;
+costs live in ``comm_model``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.topology import Coord, MeshTopology
+
+
+# ---------------------------------------------------------------------------
+# grid ring helpers
+# ---------------------------------------------------------------------------
+
+def grid_cycle(h: int, w: int) -> list[Coord]:
+    """A Hamiltonian cycle over an ``h x w`` grid with unit steps.
+
+    Exists whenever ``h`` or ``w`` is even (and for the degenerate 1-D
+    cases). For odd x odd grids we return a snake *path*; the ring's closing
+    step is then longer — the cost model charges it honestly.
+    """
+    if h == 1 or w == 1:
+        return [(r, c) for r in range(h) for c in range(w)]
+    if h % 2 == 0:
+        # right along row 0, snake down columns w-1..1, return up column 0.
+        cyc: list[Coord] = [(0, c) for c in range(w)]
+        for r in range(1, h):
+            cols = range(w - 1, 0, -1) if r % 2 == 1 else range(1, w)
+            cyc.extend((r, c) for c in cols)
+        cyc.extend((r, 0) for r in range(h - 1, 0, -1))
+        return cyc
+    if w % 2 == 0:
+        return [(c, r) for (r, c) in grid_cycle(w, h)]
+    # odd x odd: boustrophedon path (not a perfect cycle).
+    path: list[Coord] = []
+    for r in range(h):
+        cols = range(w) if r % 2 == 0 else range(w - 1, -1, -1)
+        path.extend((r, c) for c in cols)
+    return path
+
+
+def factor_pair(n: int, max_h: int, max_w: int) -> tuple[int, int]:
+    """Factor ``n = h * w`` with ``h | max_h`` and ``w | max_w``, preferring
+    the most square pair (minimal ``h + w``)."""
+    best: tuple[int, int] | None = None
+    for h in range(1, n + 1):
+        if n % h:
+            continue
+        w = n // h
+        if max_h % h or max_w % w:
+            continue
+        if best is None or h + w < sum(best):
+            best = (h, w)
+    if best is None:
+        raise ValueError(f"cannot tile {n} devices into {max_h}x{max_w} mesh")
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Mapping
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Mapping:
+    """Placement of ``dp`` TP groups x ``tp`` ranks onto a mesh."""
+
+    topo: MeshTopology
+    dp: int
+    tp: int
+    name: str
+    # tp_groups[g] = device ids of group g in *ring order*.
+    tp_groups: list[list[int]]
+    # ftds[f] = device ids of FTD f (one member per TP group).
+    ftds: list[list[int]]
+
+    def __post_init__(self) -> None:
+        n = self.topo.n_devices
+        self.group_of = np.full(n, -1, dtype=np.int64)
+        self.rank_of = np.full(n, -1, dtype=np.int64)
+        self.ftd_of = np.full(n, -1, dtype=np.int64)
+        for g, devs in enumerate(self.tp_groups):
+            for r, d in enumerate(devs):
+                self.group_of[d] = g
+                self.rank_of[d] = r
+        for f, devs in enumerate(self.ftds):
+            for d in devs:
+                self.ftd_of[d] = f
+        assert (self.group_of >= 0).all(), "every device must be in a TP group"
+        assert (self.ftd_of >= 0).all(), "every device must be in an FTD"
+
+    # -- ring schedule ------------------------------------------------------
+
+    def ring_hop_distances(self, g: int) -> list[int]:
+        """Hop distance of every consecutive (cyclic) edge of group ``g``'s
+        ring. The all-reduce step time scales with the max of these."""
+        devs = self.tp_groups[g]
+        coords = [self.topo.coord(d) for d in devs]
+        return [
+            self.topo.hops(coords[i], coords[(i + 1) % len(coords)])
+            for i in range(len(coords))
+        ]
+
+    def max_ring_hop(self) -> int:
+        return max(max(self.ring_hop_distances(g)) for g in range(self.dp))
+
+    # -- device order for jax.make_mesh -------------------------------------
+
+    def device_order(self) -> np.ndarray:
+        """(dp, tp) array of device ids: feed ``devices[order]`` to
+        ``jax.sharding.Mesh`` so the logical ("data","model") axes land on
+        the physical placement this mapping describes."""
+        return np.array(self.tp_groups, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# constructors
+# ---------------------------------------------------------------------------
+
+def baseline_mapping(topo: MeshTopology, dp: int, tp: int) -> Mapping:
+    """Contiguous-block placement (Fig. 8(b))."""
+    if dp * tp != topo.n_devices:
+        raise ValueError(f"dp*tp={dp * tp} != devices={topo.n_devices}")
+    bh, bw = factor_pair(tp, topo.rows, topo.global_cols)
+    grid_h, grid_w = topo.rows // bh, topo.global_cols // bw
+
+    tp_groups: list[list[int]] = []
+    for gr in range(grid_h):
+        for gc in range(grid_w):
+            ring = grid_cycle(bh, bw)
+            devs = [
+                topo.device_id((gr * bh + r, gc * bw + c)) for (r, c) in ring
+            ]
+            tp_groups.append(devs)
+
+    # FTD f = devices at equal offset in every block.
+    ftds: list[list[int]] = []
+    for r in range(bh):
+        for c in range(bw):
+            ftds.append(
+                [
+                    topo.device_id((gr * bh + r, gc * bw + c))
+                    for gr in range(grid_h)
+                    for gc in range(grid_w)
+                ]
+            )
+    return Mapping(topo, dp, tp, "baseline", tp_groups, ftds)
+
+
+def er_mapping(topo: MeshTopology, dp: int, tp: int) -> Mapping:
+    """Entwined placement (Fig. 8(c)): compact disjoint FTD tiles."""
+    if dp * tp != topo.n_devices:
+        raise ValueError(f"dp*tp={dp * tp} != devices={topo.n_devices}")
+    th, tw = factor_pair(dp, topo.rows, topo.global_cols)
+    grid_h, grid_w = topo.rows // th, topo.global_cols // tw  # tile grid
+    if grid_h * grid_w != tp:
+        raise ValueError("tile grid does not match tp")
+
+    tile_ring = grid_cycle(grid_h, grid_w)  # ring order over tiles
+    tp_groups = []
+    for a in range(th):
+        for b in range(tw):
+            devs = [
+                topo.device_id((t_r * th + a, t_c * tw + b))
+                for (t_r, t_c) in tile_ring
+            ]
+            tp_groups.append(devs)
+
+    ftds = []
+    for t_r in range(grid_h):
+        for t_c in range(grid_w):
+            ftds.append(
+                [
+                    topo.device_id((t_r * th + a, t_c * tw + b))
+                    for a in range(th)
+                    for b in range(tw)
+                ]
+            )
+    return Mapping(topo, dp, tp, "er", tp_groups, ftds)
+
+
+def hierarchical_er_mapping(topo: MeshTopology, dp: int, tp: int) -> Mapping:
+    """HER-Mapping for multi-wafer systems (Fig. 10(c)).
+
+    Placement: every wafer is ER-mapped with ``dp`` tiles whose members are
+    the wafer-local ranks of each group; group ranks are striped across
+    wafers so the inter-wafer all-gather runs on the border links. The ring
+    order interleaves wafer-local segments so consecutive wafer-crossing
+    edges appear exactly ``n_wafers - 1`` times per ring.
+    """
+    if topo.n_wafers == 1:
+        return er_mapping(topo, dp, tp)
+    if dp * tp != topo.n_devices:
+        raise ValueError(f"dp*tp={dp * tp} != devices={topo.n_devices}")
+    if tp % topo.n_wafers:
+        raise ValueError("tp must be divisible by the wafer count")
+    local_tp = tp // topo.n_wafers
+    wafer = MeshTopology(topo.rows, topo.cols, 1)
+    local = er_mapping(wafer, dp, local_tp)
+
+    tp_groups: list[list[int]] = [[] for _ in range(dp)]
+    for w in range(topo.n_wafers):
+        for g in range(dp):
+            seg = [
+                topo.device_id((wafer.coord(d)[0], wafer.coord(d)[1] + w * topo.cols))
+                for d in local.tp_groups[g]
+            ]
+            # Snake alternate wafers so the ring closes over the border.
+            tp_groups[g].extend(seg if w % 2 == 0 else seg[::-1])
+
+    ftds: list[list[int]] = []
+    for w in range(topo.n_wafers):
+        for f in local.ftds:
+            ftds.append(
+                [
+                    topo.device_id((wafer.coord(d)[0], wafer.coord(d)[1] + w * topo.cols))
+                    for d in f
+                ]
+            )
+    m = Mapping(topo, dp, tp, "her", tp_groups, ftds)
+    return m
+
+
+MAPPINGS = {
+    "baseline": baseline_mapping,
+    "er": er_mapping,
+    "her": hierarchical_er_mapping,
+}

@@ -1,0 +1,122 @@
+"""Hardware platform models.
+
+Two families of constants live here:
+
+* Paper-fidelity platforms (WSC, DGX-B200, NVL72) used by the analytical
+  evaluator to reproduce the paper's figures (Section VI setup: each WSC die
+  is B200-equivalent; Dojo-style interconnect numbers).
+* The TPU v5e target used by the roofline analysis of the executable
+  framework (constants fixed by the task spec: 197 TFLOP/s bf16, 819 GB/s
+  HBM, ~50 GB/s/link ICI).
+
+All bandwidths are bytes/second, latencies in seconds, compute in FLOP/s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+TB = 1e12
+GB = 1e9
+US = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """Per-device compute/memory capability."""
+
+    name: str
+    flops: float           # peak FLOP/s at the evaluation precision
+    hbm_bytes: float       # memory capacity
+    hbm_bw: float          # memory bandwidth, bytes/s
+    # Sustained efficiency knobs used by the analytical compute model.
+    flops_efficiency: float = 0.7
+    hbm_efficiency: float = 0.8
+
+    def compute_time(self, flops: float, bytes_moved: float) -> float:
+        """Roofline execution-time estimate for one kernel invocation."""
+        return max(
+            flops / (self.flops * self.flops_efficiency),
+            bytes_moved / (self.hbm_bw * self.hbm_efficiency),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One network link class: per-direction bandwidth and per-hop latency."""
+
+    bw: float              # bytes/s, per direction
+    latency: float         # seconds per hop (link + protocol)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformSpec:
+    """A deployable platform = device spec + network link classes.
+
+    ``intra`` is the dense local network (on-wafer d2d / NVLink / ICI),
+    ``inter`` the cross-group network (cross-wafer border / InfiniBand /
+    DCI). For single-tier platforms ``inter`` simply equals ``intra``.
+    """
+
+    name: str
+    device: DeviceSpec
+    intra: LinkSpec
+    inter: LinkSpec
+    group_size: int        # devices inside one high-bw island (node/wafer/pod)
+
+
+# --- Paper Section VI-A platform setup -------------------------------------
+# Each WSC die is assumed B200-equivalent: 2250 TFLOPS FP16, 180 GB HBM at
+# 8 TB/s. Die-to-die bidirectional bandwidth 8 TB/s (=> 4 TB/s per
+# direction), one-border cross-wafer 9 TB/s (=> 4.5 TB/s per direction).
+B200_DIE = DeviceSpec(
+    name="B200",
+    flops=2250e12,
+    hbm_bytes=180 * GB,
+    hbm_bw=8 * TB,
+)
+
+WSC = PlatformSpec(
+    name="WSC",
+    device=B200_DIE,
+    intra=LinkSpec(bw=4 * TB, latency=0.05 * US),
+    inter=LinkSpec(bw=4.5 * TB, latency=0.2 * US),
+    group_size=64,  # one 8x8 wafer
+)
+
+# DGX B200: 8 GPUs per node on NVLink5 (1.8 TB/s bidir => 0.9 TB/s per
+# direction), nodes joined by 400 GB/s InfiniBand with ~2 us latency.
+DGX = PlatformSpec(
+    name="DGX",
+    device=B200_DIE,
+    intra=LinkSpec(bw=0.9 * TB, latency=0.3 * US),
+    inter=LinkSpec(bw=0.05 * TB, latency=2.0 * US),
+    group_size=8,
+)
+
+# NVL72: 72 dies behind a unified NVLink switch fabric.
+NVL72 = PlatformSpec(
+    name="NVL72",
+    device=B200_DIE,
+    intra=LinkSpec(bw=0.9 * TB, latency=0.3 * US),
+    inter=LinkSpec(bw=0.9 * TB, latency=0.3 * US),
+    group_size=72,
+)
+
+# --- TPU v5e target (executable framework roofline) ------------------------
+TPU_V5E = DeviceSpec(
+    name="TPUv5e",
+    flops=197e12,          # bf16
+    hbm_bytes=16 * GB,
+    hbm_bw=819 * GB,
+)
+
+TPU_POD = PlatformSpec(
+    name="TPUv5e-pod",
+    device=TPU_V5E,
+    intra=LinkSpec(bw=50 * GB, latency=1.0 * US),   # ICI per link
+    inter=LinkSpec(bw=12.5 * GB, latency=10.0 * US),  # cross-pod DCI
+    group_size=256,  # 16x16 torus
+)
+
+PLATFORMS = {p.name: p for p in (WSC, DGX, NVL72, TPU_POD)}

@@ -1,0 +1,325 @@
+"""Non-invasive Balancer — trigger rule (Eq. 2) and placement algorithms.
+
+Implements:
+
+* :class:`BalancerState` — per-layer expert→device placement with shadow
+  slots, replica counts ``Num_e``, historical load EMA ``Load_e`` and device
+  heats ``Heat_d = Σ Load_e / Num_e``.
+* :func:`topology_aware_balance` — the paper's Algorithm 1: pick the most
+  popular expert on the hottest device, replicate it to the *topologically
+  nearest* device whose heat stays below the current max.
+* :func:`greedy_balance` — the EPLB-style baseline: hottest expert to the
+  globally coldest device, distance-blind.
+* :func:`should_trigger` — Eq. 2: cumulative per-layer imbalance above
+  ``alpha`` and time-since-migration above ``beta`` (``beta = 0`` for the
+  non-invasive mode).
+
+The balancer is deliberately framework-agnostic: it reasons over abstract
+device ids + a hop-distance callable, so the same code drives both the
+analytical simulator and the executable JAX serving path (where the
+resulting replica sets reprogram the token router).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+Migration = tuple[int, int, int]  # (expert, src_device, dst_device)
+
+
+@dataclasses.dataclass
+class BalancerState:
+    """Expert placement for one MoE layer."""
+
+    n_experts: int
+    n_devices: int
+    slots_per_device: int                      # native + shadow capacity
+    # replicas[e] = list of devices hosting expert e (first = native home).
+    replicas: list[list[int]]
+    load_ema: np.ndarray                       # Load_e, EMA of token counts
+    ema_decay: float = 0.8
+    dead: set[int] = dataclasses.field(default_factory=set)
+    # Straggler penalty: effective heat multiplier per device (EMA of
+    # step-time ratio vs median; 1.0 = healthy).
+    slowdown: np.ndarray | None = None
+
+    @classmethod
+    def initial(
+        cls, n_experts: int, n_devices: int, slots_per_device: int
+    ) -> "BalancerState":
+        if n_experts > n_devices * slots_per_device:
+            raise ValueError("not enough slots for native experts")
+        replicas = [[e % n_devices] for e in range(n_experts)]
+        return cls(
+            n_experts=n_experts,
+            n_devices=n_devices,
+            slots_per_device=slots_per_device,
+            replicas=replicas,
+            load_ema=np.ones(n_experts) / n_experts,
+        )
+
+    # -- derived quantities ---------------------------------------------------
+
+    def num_replicas(self) -> np.ndarray:
+        return np.array([len(r) for r in self.replicas])
+
+    def device_experts(self) -> list[list[int]]:
+        out: list[list[int]] = [[] for _ in range(self.n_devices)]
+        for e, devs in enumerate(self.replicas):
+            for d in devs:
+                out[d].append(e)
+        return out
+
+    def slots_used(self) -> np.ndarray:
+        used = np.zeros(self.n_devices, dtype=np.int64)
+        for devs in self.replicas:
+            for d in devs:
+                used[d] += 1
+        return used
+
+    def heats(self) -> np.ndarray:
+        """Heat_d = Σ_e on d Load_e / Num_e, with straggler penalty."""
+        heat = np.zeros(self.n_devices)
+        for e, devs in enumerate(self.replicas):
+            share = self.load_ema[e] / len(devs)
+            for d in devs:
+                heat[d] += share
+        if self.slowdown is not None:
+            heat = heat * self.slowdown
+        for d in self.dead:
+            heat[d] = np.inf
+        return heat
+
+    def observe(self, loads: np.ndarray) -> None:
+        """Fold one iteration's per-expert token counts into the EMA."""
+        total = loads.sum()
+        if total > 0:
+            self.load_ema = (
+                self.ema_decay * self.load_ema
+                + (1 - self.ema_decay) * loads / total
+            )
+
+    def device_token_share(self) -> np.ndarray:
+        """Expected fraction of dispatched tokens landing on each device
+        (mean-normalised) — feeds A2AWorkload.device_load."""
+        heat = np.zeros(self.n_devices)
+        for e, devs in enumerate(self.replicas):
+            share = self.load_ema[e] / len(devs)
+            for d in devs:
+                heat[d] += share
+        mean = heat[heat < np.inf].mean() if len(heat) else 1.0
+        return heat / max(mean, 1e-12)
+
+    def mark_dead(self, device: int) -> None:
+        self.dead.add(device)
+
+    def apply(self, mig: Migration) -> None:
+        e, src, dst = mig
+        assert src in self.replicas[e]
+        assert dst not in self.replicas[e]
+        self.replicas[e].append(dst)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 trigger
+# ---------------------------------------------------------------------------
+
+def imbalance_degree(loads_per_layer: Sequence[np.ndarray]) -> float:
+    """Σ_i (max(load_i) - mean(load_i)) / mean(load_i) over layers."""
+    total = 0.0
+    for loads in loads_per_layer:
+        mu = loads.mean()
+        if mu > 0:
+            total += (loads.max() - mu) / mu
+    return total
+
+
+def should_trigger(
+    loads_per_layer: Sequence[np.ndarray],
+    alpha: float,
+    dt_since_migration: float,
+    beta: float = 0.0,
+) -> bool:
+    """Paper Eq. 2 (``beta = 0`` for the non-invasive balancer)."""
+    return imbalance_degree(loads_per_layer) > alpha and dt_since_migration > beta
+
+
+# ---------------------------------------------------------------------------
+# placement algorithms
+# ---------------------------------------------------------------------------
+
+def topology_aware_balance(
+    state: BalancerState,
+    distance: Callable[[int, int], float],
+    max_migrations: int | None = None,
+) -> list[Migration]:
+    """Paper Algorithm 1.
+
+    Repeatedly: find the hottest device, its most loaded (per-replica)
+    expert, the set of devices that would stay below the current max heat
+    after adopting a replica — and copy to the topologically *nearest* one.
+    Terminates when no such device (with a free slot) exists.
+    """
+    migs: list[Migration] = []
+    # Work on copies so planning does not mutate live state.
+    replicas = [list(r) for r in state.replicas]
+    used = state.slots_used().copy()
+    load = state.load_ema
+
+    def heats() -> np.ndarray:
+        h = np.zeros(state.n_devices)
+        for e, devs in enumerate(replicas):
+            share = load[e] / len(devs)
+            for d in devs:
+                h[d] += share
+        if state.slowdown is not None:
+            h = h * state.slowdown
+        for d in state.dead:
+            h[d] = np.inf
+        return h
+
+    while max_migrations is None or len(migs) < max_migrations:
+        heat = heats()
+        hottest = int(np.argmax(heat))
+        on_hot = [e for e in range(state.n_experts) if hottest in replicas[e]]
+        if not on_hot:
+            break
+        src_e = max(on_hot, key=lambda e: load[e] / len(replicas[e]))
+        share = load[src_e] / len(replicas[src_e])
+        # After replication the share drops; candidate heat must stay below
+        # the current max for the move to reduce peak heat.
+        new_share = load[src_e] / (len(replicas[src_e]) + 1)
+        cold = [
+            d
+            for d in range(state.n_devices)
+            if d not in replicas[src_e]
+            and d not in state.dead
+            and heat[d] + new_share < heat[hottest]
+            and used[d] < state.slots_per_device
+        ]
+        if not cold:
+            break
+        dst = min(cold, key=lambda d: distance(hottest, d))
+        replicas[src_e].append(dst)
+        used[dst] += 1
+        migs.append((src_e, hottest, dst))
+        del share
+    return migs
+
+
+def greedy_balance(
+    state: BalancerState,
+    max_migrations: int | None = None,
+) -> list[Migration]:
+    """EPLB-style baseline: hottest expert → globally coldest device,
+    ignoring topology (migration distance unbounded)."""
+
+    def distance(_a: int, _b: int) -> float:
+        return 0.0
+
+    # Same peak-reduction loop, but destination = globally coldest device.
+    migs: list[Migration] = []
+    replicas = [list(r) for r in state.replicas]
+    used = state.slots_used().copy()
+    load = state.load_ema
+
+    def heats() -> np.ndarray:
+        h = np.zeros(state.n_devices)
+        for e, devs in enumerate(replicas):
+            share = load[e] / len(devs)
+            for d in devs:
+                h[d] += share
+        for d in state.dead:
+            h[d] = np.inf
+        return h
+
+    while max_migrations is None or len(migs) < max_migrations:
+        heat = heats()
+        hottest = int(np.argmax(heat))
+        on_hot = [e for e in range(state.n_experts) if hottest in replicas[e]]
+        if not on_hot:
+            break
+        src_e = max(on_hot, key=lambda e: load[e] / len(replicas[e]))
+        new_share = load[src_e] / (len(replicas[src_e]) + 1)
+        order = np.argsort(heat)
+        dst = None
+        for d in order:
+            d = int(d)
+            if (
+                d not in replicas[src_e]
+                and d not in state.dead
+                and used[d] < state.slots_per_device
+                and heat[d] + new_share < heat[hottest]
+            ):
+                dst = d
+                break
+        if dst is None:
+            break
+        replicas[src_e].append(dst)
+        used[dst] += 1
+        migs.append((src_e, hottest, dst))
+    del distance
+    return migs
+
+
+def prune_replicas(state: BalancerState, frac: float = 0.5) -> int:
+    """Reclaim shadow slots: drop the last replica of any expert whose
+    per-replica load has fallen below ``frac`` of the mean device heat
+    (the "continuous fine-tuning of slot assignments" of Section V-B).
+    Returns the number of reclaimed slots."""
+    heats = state.heats()
+    finite = heats[np.isfinite(heats)]
+    mean_heat = finite.mean() if len(finite) else 0.0
+    n = 0
+    for e in range(state.n_experts):
+        while (
+            len(state.replicas[e]) > 1
+            and state.load_ema[e] / len(state.replicas[e]) < frac * mean_heat
+        ):
+            state.replicas[e].pop()
+            n += 1
+    return n
+
+
+def evacuate(
+    state: BalancerState,
+    device: int,
+    distance: Callable[[int, int], float],
+) -> list[Migration]:
+    """Availability evacuation after a device failure: every expert whose
+    only live home is ``device`` gets a replica on the nearest device with
+    a free slot (Algorithm 1 optimizes load, not availability — this is the
+    fault-tolerance companion operation)."""
+    state.mark_dead(device)
+    used = state.slots_used()
+    migs: list[Migration] = []
+    for e in range(state.n_experts):
+        live = [d for d in state.replicas[e] if d not in state.dead]
+        if live:
+            continue
+        candidates = [
+            d
+            for d in range(state.n_devices)
+            if d not in state.dead and used[d] < state.slots_per_device
+        ]
+        if not candidates:
+            break
+        dst = min(candidates, key=lambda d: distance(device, d))
+        mig = (e, device, dst)
+        state.apply(mig)
+        used[dst] += 1
+        migs.append(mig)
+    return migs
+
+
+# ---------------------------------------------------------------------------
+# router integration: split tokens across replicas
+# ---------------------------------------------------------------------------
+
+def replica_shares(state: BalancerState) -> list[np.ndarray]:
+    """Per-expert token split across its replicas (uniform — each replica
+    takes 1/Num_e of the expert's traffic)."""
+    return [np.full(len(r), 1.0 / len(r)) for r in state.replicas]

@@ -1,0 +1,22 @@
+"""Jit'd wrapper for flash attention (interpret on CPU, compiled on TPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "interpret")
+)
+def flash_attention_op(
+    q, k, v, causal: bool = True, window: int = 0, interpret: bool | None = None
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention(
+        q, k, v, causal=causal, window=window, interpret=interpret
+    )

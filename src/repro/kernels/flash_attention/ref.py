@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for causal (optionally windowed) GQA flash attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(
+    q: jax.Array,       # (B, S, H, hd)
+    k: jax.Array,       # (B, T, K, hd)
+    v: jax.Array,       # (B, T, K, hd)
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    b, s, nh, hd = q.shape
+    t, nk = k.shape[1], k.shape[2]
+    g = nh // nk
+    qg = q.reshape(b, s, nk, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd)
+    if causal:
+        qpos = jnp.arange(s)[:, None] + (t - s)
+        kpos = jnp.arange(t)[None, :]
+        m = kpos <= qpos
+        if window:
+            m &= kpos > qpos - window
+        scores = jnp.where(m, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return o.reshape(b, s, nh, hd)

@@ -1,0 +1,100 @@
+"""Flash-decode Pallas kernel: one query token vs a long KV cache.
+
+Decode is HBM-bound (the whole KV cache streams through once), so the
+kernel's job is to keep that stream dense: grid (B, K, T/bt) with the KV
+axis sequential, online softmax in VMEM scratch, and — the GQA trick — all
+``G = H/K`` query heads of a KV group processed *together* as a (G, hd)
+panel, turning the per-block score computation into an MXU (G x hd) @
+(hd x bt) matmul instead of G vector passes. Cache-slot validity arrives
+as an int32 mask (ring buffers / partially filled caches).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, m_in_ref, o_ref, m_ref, l_ref, acc_ref, *, nt: int):
+    jt = pl.program_id(2)
+
+    @pl.when(jt == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                             # (G, hd)
+    k = k_ref[0, :, 0, :]                       # (bt, hd)
+    v = v_ref[0, :, 0, :]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) / (q.shape[-1] ** 0.5)                     # (G, bt)
+    valid = m_in_ref[0, :]                       # (bt,)
+    s = jnp.where(valid[None, :] > 0, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(jt == nt - 1)
+    def _():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jax.Array,       # (B, H, hd)
+    k: jax.Array,       # (B, T, K, hd)
+    v: jax.Array,       # (B, T, K, hd)
+    valid: jax.Array,   # (B, T) int32
+    *,
+    bt: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, nh, hd = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+
+    def _fit(n, pref):
+        tt = min(pref, n)
+        while n % tt:
+            tt -= 1
+        return tt
+
+    bt = _fit(t, bt)
+    nt = t // bt
+    qg = q.reshape(b, nkv, g, hd)
+    grid = (b, nkv, nt)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, nt=nt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bi, kh, jt: (bi, kh, 0, 0)),
+            pl.BlockSpec((1, bt, 1, hd), lambda bi, kh, jt: (bi, jt, kh, 0)),
+            pl.BlockSpec((1, bt, 1, hd), lambda bi, kh, jt: (bi, jt, kh, 0)),
+            pl.BlockSpec((1, bt), lambda bi, kh, jt: (bi, jt)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bi, kh, jt: (bi, kh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, valid.astype(jnp.int32))
+    return out.reshape(b, nh, hd)

@@ -1,0 +1,16 @@
+"""Jit'd wrapper for flash decode."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_decode.flash_decode import flash_decode
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_op(q, k, v, valid, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_decode(q, k, v, valid, interpret=interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token GQA decode attention with a mask."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_ref(
+    q: jax.Array,        # (B, H, hd)
+    k: jax.Array,        # (B, T, K, hd)
+    v: jax.Array,        # (B, T, K, hd)
+    valid: jax.Array,    # (B, T) bool/int — which cache slots participate
+) -> jax.Array:
+    b, nh, hd = q.shape
+    nk = k.shape[2]
+    g = nh // nk
+    qg = q.reshape(b, nk, g, hd)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k).astype(jnp.float32)
+    s = s / jnp.sqrt(hd)
+    s = jnp.where(valid[:, None, None, :].astype(bool), s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v)
+    return o.reshape(b, nh, hd)

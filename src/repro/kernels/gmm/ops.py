@@ -1,0 +1,33 @@
+"""Jit'd wrappers for the grouped-matmul kernels.
+
+``expert_ffn`` is the drop-in replacement for the three-einsum expert
+compute inside the EP/ESP MoE paths: fused SwiGLU front half + gmm down
+projection. ``interpret`` defaults to True off-TPU so CPU tests execute the
+kernel bodies; on TPU pass interpret=False (or rely on the default).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.gmm.gmm import gmm, gmm_dual_act
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gmm_op(x, w, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return gmm(x, w, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def expert_ffn(x, wg, wu, wd, interpret: bool | None = None):
+    """(G,C,D) x (G,D,F) x2 x (G,F,D) -> (G,C,D): fused SwiGLU expert FFN."""
+    interpret = _default_interpret() if interpret is None else interpret
+    h = gmm_dual_act(x, wg, wu, interpret=interpret)
+    return gmm(h, wd, interpret=interpret)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for the grouped-matmul / fused expert-FFN kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (G, C, D), w: (G, D, F) -> (G, C, F)."""
+    return jnp.einsum("gcd,gdf->gcf", x, w)
+
+
+def expert_ffn_ref(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array):
+    """Fused SwiGLU expert FFN over bucketed tokens.
+
+    x: (G, C, D); wg/wu: (G, D, F); wd: (G, F, D) -> (G, C, D).
+    """
+    h = jax.nn.silu(gmm_ref(x, wg)) * gmm_ref(x, wu)
+    return gmm_ref(h, wd)

@@ -1,0 +1,281 @@
+"""GQA attention: full / sliding-window, train/prefill/decode, cross-attn.
+
+Layout conventions: activations ``(batch, seq, d_model)``; q ``(B,S,H,hd)``;
+k/v ``(B,S,K,hd)`` with ``K = n_kv_heads``. GQA is computed in grouped form
+(no materialized head repetition). Softmax in fp32.
+
+Decode caches:
+* full attention — cache length = max seq, write at ``pos``;
+* sliding window — ring buffer of length ``window``, write at ``pos % W``.
+
+Sharding: heads (H and K) on the model axis, batch on the data axes. For
+decode with ``seq_parallel_kv`` the cache's *sequence* dim rides the model
+axis instead (flash-decode style) — see ``repro.parallel.collectives``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, normal_init
+from repro.parallel.ctx import ParallelCtx
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, h = cfg.d_model, cfg.head_dim_
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": normal_init(kq, (d, cfg.n_heads * h), dtype=dtype),
+        "wk": normal_init(kk, (d, cfg.n_kv_heads * h), dtype=dtype),
+        "wv": normal_init(kv, (d, cfg.n_kv_heads * h), dtype=dtype),
+        "wo": normal_init(ko, (cfg.n_heads * h, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * h,), dtype=dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * h,), dtype=dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * h,), dtype=dtype)
+    return p
+
+
+def qkv_proj(
+    p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    h = cfg.head_dim_
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, h)
+    k = k.reshape(b, s, cfg.n_kv_heads, h)
+    v = v.reshape(b, s, cfg.n_kv_heads, h)
+    q = ctx.shard(q, ctx.batch_spec, None, ctx.model_axis, None)
+    k = ctx.shard(k, ctx.batch_spec, None, ctx.model_axis, None)
+    v = ctx.shard(v, ctx.batch_spec, None, ctx.model_axis, None)
+    return q, k, v
+
+
+def out_proj(p: dict, o: jax.Array, ctx: ParallelCtx) -> jax.Array:
+    b, s = o.shape[:2]
+    o = o.reshape(b, s, -1)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# reference attention math (grouped GQA, fp32 softmax)
+# ---------------------------------------------------------------------------
+
+def gqa_attend(
+    q: jax.Array,      # (B, S, H, hd)
+    k: jax.Array,      # (B, T, K, hd)
+    v: jax.Array,      # (B, T, K, hd)
+    mask: jax.Array | None,   # broadcastable to (B, 1, 1, S, T) or (S, T)
+) -> jax.Array:
+    b, s, nh, hd = q.shape
+    nk = k.shape[2]
+    g = nh // nk
+    qg = q.reshape(b, s, nk, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, nh, hd)
+
+
+CHUNKED_KV_THRESHOLD = 2048  # switch to the online-softmax path beyond this
+
+
+def chunked_gqa_attend(
+    q: jax.Array,      # (B, S, H, hd)
+    k: jax.Array,      # (B, T, K, hd)
+    v: jax.Array,      # (B, T, K, hd)
+    causal: bool,
+    window: int,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style attention in pure jnp: scan over KV chunks with an online
+    softmax, so the S x T score matrix is never materialized. This is the
+    memory-feasible path for train_4k/prefill_32k at full scale (the Pallas
+    kernel is the TPU-optimized equivalent; this one is backend-agnostic
+    and differentiable)."""
+    b, s, nh, hd = q.shape
+    t, nk = k.shape[1], k.shape[2]
+    g = nh // nk
+    while t % chunk:
+        chunk //= 2
+    n_chunks = t // chunk
+    qg = (q / jnp.sqrt(hd)).reshape(b, s, nk, g, hd)
+    kc = k.reshape(b, n_chunks, chunk, nk, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, nk, hd).transpose(1, 0, 2, 3, 4)
+    offset = t - s  # queries cover the tail of the key range
+
+    def step(carry, inp):
+        m_run, l_run, acc = carry
+        k_blk, v_blk, j = inp
+        sc = jnp.einsum("bskgd,btkd->bkgst", qg, k_blk).astype(jnp.float32)
+        if causal:
+            qpos = offset + jnp.arange(s)[:, None]
+            kpos = j * chunk + jnp.arange(chunk)[None, :]
+            mask = kpos <= qpos
+            if window:
+                mask = mask & (kpos > qpos - window)
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        upd = jnp.einsum("bkgst,btkd->bskgd", p.astype(v_blk.dtype), v_blk)
+        acc = acc * alpha.transpose(0, 3, 1, 2)[..., None].astype(acc.dtype) + upd
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, nk, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nk, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, s, nk, g, hd), v.dtype)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kc, vc, jnp.arange(n_chunks))
+    )
+    l_f = jnp.maximum(l_f, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    out = acc / l_f.astype(acc.dtype)
+    return out.reshape(b, s, nh, hd)
+
+
+def causal_mask(s: int, t: int | None = None, window: int = 0, offset: int = 0):
+    """(S, T) boolean mask. ``offset`` = absolute position of query 0 minus
+    position of key 0 (0 when q/k cover the same range)."""
+    t = t or s
+    qpos = jnp.arange(s)[:, None] + offset
+    kpos = jnp.arange(t)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# train / prefill
+# ---------------------------------------------------------------------------
+
+def attention(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    positions: jax.Array | None = None,
+    causal: bool = True,
+    return_kv: bool = False,
+):
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = qkv_proj(p, x, cfg, ctx)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if s > CHUNKED_KV_THRESHOLD and not ctx.force_dense_attn:
+        o = chunked_gqa_attend(q, k, v, causal, cfg.sliding_window)
+    else:
+        mask = causal_mask(s, window=cfg.sliding_window) if causal else None
+        o = gqa_attend(q, k, v, mask)
+    o = ctx.shard(o, ctx.batch_spec, None, ctx.model_axis, None)
+    out = out_proj(p, o, ctx)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_attention(
+    p: dict,
+    x: jax.Array,
+    kv: tuple[jax.Array, jax.Array],
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder k/v (no mask)."""
+    b, s, _ = x.shape
+    h = cfg.head_dim_
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, s, cfg.n_heads, h)
+    q = ctx.shard(q, ctx.batch_spec, None, ctx.model_axis, None)
+    o = gqa_attend(q, kv[0], kv[1], None)
+    return out_proj(p, o, ctx)
+
+
+def cross_kv(
+    p: dict, memory: jax.Array, cfg: ModelConfig, ctx: ParallelCtx
+) -> tuple[jax.Array, jax.Array]:
+    b, t, _ = memory.shape
+    h = cfg.head_dim_
+    k = jnp.einsum("btd,de->bte", memory, p["wk"])
+    v = jnp.einsum("btd,de->bte", memory, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(b, t, cfg.n_kv_heads, h)
+    v = v.reshape(b, t, cfg.n_kv_heads, h)
+    k = ctx.shard(k, ctx.batch_spec, None, ctx.model_axis, None)
+    v = ctx.shard(v, ctx.batch_spec, None, ctx.model_axis, None)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def cache_init(
+    cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32
+) -> dict:
+    w = cfg.sliding_window or 0
+    length = min(max_seq, w) if w else max_seq
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim_)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, ctx: ParallelCtx):
+    """PartitionSpec elements for one layer's k/v cache."""
+    if ctx.seq_parallel_kv:
+        return (ctx.batch_spec, ctx.model_axis, None, None)
+    return (ctx.batch_spec, None, ctx.model_axis, None)
+
+
+def decode_attention(
+    p: dict,
+    x: jax.Array,            # (B, 1, d)
+    cache: dict,             # {"k","v"}: (B, L, K, hd)
+    pos: jax.Array,          # scalar int32 — absolute position of new token
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+) -> tuple[jax.Array, dict]:
+    b = x.shape[0]
+    h = cfg.head_dim_
+    q, k_new, v_new = qkv_proj(p, x, cfg, ctx)
+    posb = jnp.broadcast_to(pos, (b, 1))
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k_new = apply_rope(k_new, posb, cfg.rope_theta)
+
+    length = cache["k"].shape[1]
+    w = cfg.sliding_window or 0
+    slot = jnp.where(w > 0, pos % length, jnp.minimum(pos, length - 1))
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+
+    j = jnp.arange(length)
+    if w > 0:
+        # ring buffer: slot j holds absolute position pos - ((pos - j) % L);
+        # negative => never written yet.
+        slot_pos = pos - ((pos - j) % length)
+        mask = slot_pos >= 0
+    else:
+        mask = j <= pos
+    o = gqa_attend(q, k_cache, v_cache, mask[None, None, None, None, :])
+    o = ctx.shard(o, ctx.batch_spec, None, ctx.model_axis, None)
+    out = out_proj(p, o, ctx)
+    return out, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,54 @@
+"""Shared layer primitives: norms, RoPE, SwiGLU MLP, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.ctx import ParallelCtx
+
+
+def normal_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype=dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (TP-sharded hidden dim)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": normal_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": normal_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": normal_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, ctx: ParallelCtx) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = ctx.shard(jax.nn.silu(h) * u, *(None,) * (x.ndim - 1), ctx.model_axis)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])

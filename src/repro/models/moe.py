@@ -1,0 +1,220 @@
+"""MoE layer: router, expert FFNs, and three parallel implementations.
+
+* ``dense``  — reference oracle: every expert computed for every token,
+  masked combine. Exact; used by tests and tiny smoke configs.
+* ``ep``     — expert parallelism: shard_map all_to_all dispatch into
+  fixed-capacity per-slot buckets (the paper's deployment; supports shadow
+  replicas via the traced placement table).
+* ``esp``    — expert-sharding parallelism (paper §VI-B5): every device
+  holds a 1/tp slice of *all* experts' FFN dims; tokens are bucketed by
+  expert locally (no all-to-all) and partial sums all-reduce over the model
+  axis. Used when ``n_experts`` doesn't divide the EP axis (Mixtral/DBRX on
+  wide meshes) — exactly the regime the paper assigns to ESP.
+
+The auxiliary load-balancing loss (Switch-style) is returned alongside.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import normal_init
+from repro.parallel.collectives import (
+    bucket_combine,
+    bucket_dispatch,
+    ep_moe_shardmap,
+    uniform_placement,
+)
+from repro.parallel.ctx import ParallelCtx
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff_
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": normal_init(kr, (d, e), dtype=jnp.float32),  # fp32 router
+        "w_gate": normal_init(kg, (e, d, f), dtype=dtype),
+        "w_up": normal_init(ku, (e, d, f), dtype=dtype),
+        "w_down": normal_init(kd, (e, f, d), dtype=dtype),
+    }
+
+
+def route(
+    p: dict, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k routing. Returns (expert_ids, weights, aux_loss)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, cfg.experts_per_token)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # Switch-style aux loss: E * sum_e fraction_tokens_e * mean_prob_e.
+    e = cfg.n_experts
+    one_hot = jax.nn.one_hot(ids, e, dtype=jnp.float32)     # (..., k, E)
+    frac = jnp.mean(jnp.sum(one_hot, axis=-2).reshape(-1, e), axis=0)
+    mean_prob = jnp.mean(probs.reshape(-1, e), axis=0)
+    aux = e * jnp.sum(frac * mean_prob)
+    return ids, weights.astype(x.dtype), aux
+
+
+def zero_aux(cfg: ModelConfig) -> dict:
+    """Aux accumulator template (works for dense archs too)."""
+    return {
+        "loss": jnp.zeros((), jnp.float32),
+        "counts": jnp.zeros((max(cfg.n_experts, 1),), jnp.float32),
+    }
+
+
+def _aux(loss, ids, cfg: ModelConfig) -> dict:
+    counts = jnp.bincount(
+        ids.reshape(-1), length=max(cfg.n_experts, 1)
+    ).astype(jnp.float32)
+    return {"loss": loss, "counts": counts}
+
+
+# ---------------------------------------------------------------------------
+# dense oracle
+# ---------------------------------------------------------------------------
+
+def moe_dense(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
+    ids, w, aux = route(p, x, cfg)
+    h = jnp.einsum("...d,edf->...ef", x, p["w_gate"])
+    u = jnp.einsum("...d,edf->...ef", x, p["w_up"])
+    y = jnp.einsum("...ef,efd->...ed", jax.nn.silu(h) * u, p["w_down"])
+    mask = jax.nn.one_hot(ids, cfg.n_experts, dtype=w.dtype)       # (...,k,E)
+    comb = jnp.einsum("...ke,...k->...e", mask, w)
+    out = jnp.einsum("...ed,...e->...d", y, comb)
+    return out, _aux(aux, ids, cfg)
+
+
+# ---------------------------------------------------------------------------
+# ESP: expert-sharded FFN, local bucketing, all-reduce combine
+# ---------------------------------------------------------------------------
+
+def moe_esp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
+    """Experts' hidden dims sharded over the model axis (GSPMD handles the
+    partial-sum all-reduce of w_down). Tokens are bucketed per expert so
+    FLOPs stay ~topk * capacity_factor, not n_experts.
+
+    Dispatch is *group-local*: tokens are reshaped so the leading group dim
+    aligns with the batch sharding, each data shard sorts/scatters only its
+    own tokens, and every bucket tensor keeps the group dim sharded. Without
+    this, GSPMD replicates the global buckets across all data rows —
+    redundant expert FLOPs x n_batch and a giant dispatch all-gather (see
+    EXPERIMENTS.md §Perf, mixtral hillclimb)."""
+    ids, w, aux = route(p, x, cfg)
+    b, s, d = x.shape
+    k = cfg.experts_per_token
+    e = cfg.n_experts
+    groups = ctx.n_batch if (ctx.mesh is not None and b % ctx.n_batch == 0) else 1
+    n_loc = (b // groups) * s
+    cap = max(int(n_loc * k * ctx.capacity_factor / e), 8)
+
+    wg = ctx.shard(p["w_gate"], None, None, ctx.model_axis)
+    wu = ctx.shard(p["w_up"], None, None, ctx.model_axis)
+    wd = ctx.shard(p["w_down"], None, ctx.model_axis, None)
+
+    bspec = ctx.batch_spec
+    xg = ctx.shard(x.reshape(groups, n_loc, d), bspec, None, None)
+    idg = ids.reshape(groups, n_loc, k)
+    wtg = w.reshape(groups, n_loc, k)
+    bufs, slots, keep = jax.vmap(
+        lambda xx, ii: bucket_dispatch(xx, ii, e, cap)
+    )(xg, idg)
+    bufs = ctx.shard(bufs, bspec, None, None, None)     # (G, E, cap, d)
+    h = jnp.einsum("gecd,edf->gecf", bufs, wg)
+    u = jnp.einsum("gecd,edf->gecf", bufs, wu)
+    h = ctx.shard(jax.nn.silu(h) * u, bspec, None, None, ctx.model_axis)
+    y = jnp.einsum("gecf,efd->gecd", h, wd)
+    # Reduce-scatter (d-sharded) instead of a full all-reduce of the padded
+    # buckets; the all-gather happens after combine, on the much smaller
+    # per-token tensor (§Perf iteration 3).
+    y = ctx.shard(y, bspec, None, None, ctx.model_axis)
+    out = jax.vmap(bucket_combine)(y, idg, slots, keep, wtg)
+    out = ctx.shard(out, bspec, None, None)
+    return out.reshape(b, s, d), _aux(aux, ids, cfg)
+
+
+# ---------------------------------------------------------------------------
+# EP via shard_map (paper-faithful dispatch)
+# ---------------------------------------------------------------------------
+
+def moe_ep(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    placement: tuple[jax.Array, jax.Array] | None = None,
+    slot_weights: dict | None = None,
+    slots_per_device: int | None = None,
+):
+    """Expert-parallel dispatch over the model axis.
+
+    ``placement`` is (slot_of, n_replicas); default = native homes. For
+    serving with shadow slots the Server owns ``slot_weights`` (n_slots
+    rows, possibly > n_experts) and updates replica rows out-of-band; the
+    default materializes slots from the logical experts (slot i = expert
+    i % E)."""
+    ep = ctx.n_model
+    e = cfg.n_experts
+    n_rows = p["w_gate"].shape[0]  # physical slot rows (>= n_experts when
+    # the Server pre-expanded shadow slots)
+    if slot_weights is None:
+        if n_rows % ep == 0:
+            slots_per_device = slots_per_device or n_rows // ep
+            slot_weights = p  # slot i holds expert i % E
+        else:
+            slots_per_device = slots_per_device or max(-(-n_rows // ep), 1)
+            n_slots = ep * slots_per_device
+            reps = -(-n_slots // n_rows)
+            slot_weights = {
+                k2: jnp.tile(p[k2], (reps, 1, 1))[:n_slots]
+                for k2 in ("w_gate", "w_up", "w_down")
+            }
+    n_slots = ep * slots_per_device
+    if placement is None:
+        slot_of, n_replicas = uniform_placement(e, n_slots)
+    else:
+        slot_of, n_replicas = placement
+
+    ids, w, aux = route(p, x, cfg)
+    out = ep_moe_shardmap(
+        x,
+        ids,
+        w,
+        slot_weights,
+        slot_of,
+        n_replicas,
+        ctx,
+        ctx.capacity_factor,
+        slots_per_device,
+        decode=x.shape[1] == 1,
+    )
+    return out, _aux(aux, ids, cfg)
+
+
+def moe_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    placement=None,
+):
+    impl = ctx.moe_impl
+    if impl == "auto":
+        if ctx.mesh is None:
+            impl = "dense"
+        elif cfg.n_experts % ctx.n_model == 0:
+            # E/D >= 1: expert parallelism (decode uses owned-token dispatch).
+            impl = "ep"
+        else:
+            # E/D < 1: ESP — the paper's choice for few-large-expert models.
+            impl = "esp"
+    if impl == "dense":
+        return moe_dense(p, x, cfg, ctx)
+    if impl == "esp":
+        return moe_esp(p, x, cfg, ctx)
+    if impl == "ep":
+        return moe_ep(p, x, cfg, ctx, placement)
+    raise ValueError(f"unknown moe impl {impl!r}")

@@ -1,0 +1,260 @@
+"""State-space / recurrent blocks: Mamba2 (zamba2) and xLSTM (mLSTM+sLSTM).
+
+All blocks expose three entry points with a common cache convention:
+
+* ``*_apply(p, x, ...)``         — full-sequence train/prefill; returns
+  ``(y, final_state)`` so prefill can seed the decode cache.
+* ``*_decode(p, x1, state, ...)``— one-token step, O(1) in context length
+  (this is what makes the ``long_500k`` cell run for these families).
+
+Time recurrences use ``jax.lax.scan`` over the sequence; the carries are
+the decode states, so prefill/decode consistency is by construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import normal_init
+from repro.parallel.ctx import ParallelCtx
+
+CONV_W = 4  # causal conv width (Mamba2)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (simplified SSD: scalar decay per head, shared B/C group)
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    d_inner = 2 * cfg.d_model
+    head = 64 if d_inner % 64 == 0 else d_inner
+    n_heads = d_inner // head
+    return d_inner, head, n_heads, cfg.ssm_state
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    d_inner, _, n_heads, n = mamba_dims(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        # Separate projections (not one fused w_in) so each output dim
+        # shards cleanly on the model axis without split-boundary reshards.
+        "w_z": normal_init(ks[0], (d, d_inner), dtype=dtype),
+        "w_xbc": normal_init(ks[3], (d, d_inner + 2 * n), dtype=dtype),
+        "w_dt": normal_init(ks[4], (d, n_heads), dtype=dtype),
+        "conv_w": normal_init(ks[1], (CONV_W, d_inner + 2 * n), dtype=dtype),
+        "conv_b": jnp.zeros((d_inner + 2 * n,), dtype=dtype),
+        "a_log": jnp.zeros((n_heads,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), dtype=jnp.float32),
+        "d_skip": jnp.ones((n_heads,), dtype=jnp.float32),
+        "w_out": normal_init(ks[2], (d_inner, d), dtype=dtype),
+        "norm_w": jnp.ones((d_inner,), dtype=dtype),
+    }
+
+
+def _mamba_proj(p: dict, x: jax.Array, cfg: ModelConfig):
+    z = jnp.einsum("btd,de->bte", x, p["w_z"])
+    xbc = jnp.einsum("btd,de->bte", x, p["w_xbc"])
+    dt = jnp.einsum("btd,de->bte", x, p["w_dt"])
+    return z, xbc, dt
+
+
+def _conv_causal(p: dict, xbc: jax.Array, conv_state: jax.Array | None):
+    """Depthwise causal conv over time; returns output + new conv state."""
+    pad = (
+        conv_state
+        if conv_state is not None
+        else jnp.zeros((xbc.shape[0], CONV_W - 1, xbc.shape[-1]), xbc.dtype)
+    )
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        full[:, i : i + xbc.shape[1]] * p["conv_w"][i] for i in range(CONV_W)
+    ) + p["conv_b"]
+    new_state = full[:, -(CONV_W - 1) :]
+    return jax.nn.silu(out), new_state
+
+
+def _ssm_scan(p, xh, b, c, dt, cfg, state0):
+    """h_t = exp(A dt_t) h_{t-1} + dt_t x_t B_t^T ; y_t = h_t C_t + D x_t."""
+    _, head, n_heads, n = mamba_dims(cfg)
+    bt, t = xh.shape[0], xh.shape[1]
+    a = -jnp.exp(p["a_log"])                                     # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    xh = xh.reshape(bt, t, n_heads, head)
+
+    def step(h, inp):
+        x_t, b_t, c_t, dt_t = inp                                # (B,H,hd),(B,N),(B,N),(B,H)
+        decay = jnp.exp(a * dt_t)[..., None, None]               # (B,H,1,1)
+        upd = (dt_t[..., None] * x_t)[..., None] * b_t[:, None, None, :]
+        h = decay * h + upd                                      # (B,H,hd,N)
+        y = jnp.einsum("bhdn,bn->bhd", h, c_t)
+        return h, y
+
+    xs = (
+        xh.transpose(1, 0, 2, 3).astype(jnp.float32),
+        b.transpose(1, 0, 2).astype(jnp.float32),
+        c.transpose(1, 0, 2).astype(jnp.float32),
+        dt.transpose(1, 0, 2),
+    )
+    h_last, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3)                                 # (B,T,H,hd)
+    y = y + p["d_skip"][:, None] * xh.astype(jnp.float32)
+    return y.reshape(bt, t, -1), h_last
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int) -> dict:
+    d_inner, head, n_heads, n = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, CONV_W - 1, d_inner + 2 * n), jnp.float32),
+        "ssm": jnp.zeros((batch, n_heads, head, n), jnp.float32),
+    }
+
+
+def mamba_apply(p: dict, x: jax.Array, cfg: ModelConfig, state: dict | None = None):
+    d_inner, _, _, n = mamba_dims(cfg)
+    if state is None:
+        state = mamba_state_init(cfg, x.shape[0])
+    z, xbc, dt = _mamba_proj(p, x, cfg)
+    xbc, conv_state = _conv_causal(p, xbc, state["conv"])
+    xh, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    y, h_last = _ssm_scan(p, xh, b, c, dt, cfg, state["ssm"])
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    # RMS-norm before out-proj (Mamba2 style).
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5).astype(y.dtype)) * p["norm_w"]
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    return out, {"conv": conv_state, "ssm": h_last}
+
+
+def mamba_decode(p: dict, x1: jax.Array, state: dict, cfg: ModelConfig):
+    """x1: (B, 1, d) — one token; O(1) state update."""
+    return mamba_apply(p, x1, cfg, state)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory) blocks
+# ---------------------------------------------------------------------------
+
+def xlstm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    return cfg.n_heads, cfg.d_model // cfg.n_heads
+
+
+def mlstm_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h, _ = xlstm_dims(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_qkv": normal_init(ks[0], (d, 3 * d), dtype=dtype),
+        "w_gates": normal_init(ks[1], (d, 2 * h), dtype=dtype, scale=0.01),
+        "b_gates": jnp.zeros((2 * h,), dtype=jnp.float32),
+        "w_out": normal_init(ks[2], (d, d), dtype=dtype),
+        "norm_w": jnp.ones((d,), dtype=dtype),
+    }
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int) -> dict:
+    h, hd = xlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_apply(p: dict, x: jax.Array, cfg: ModelConfig, state: dict | None = None):
+    bsz, t, d = x.shape
+    h, hd = xlstm_dims(cfg)
+    if state is None:
+        state = mlstm_state_init(cfg, bsz)
+    qkv = jnp.einsum("btd,de->bte", x, p["w_qkv"]).reshape(bsz, t, 3, h, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    gates = jnp.einsum("btd,de->bte", x, p["w_gates"]).astype(jnp.float32) + p["b_gates"]
+    log_i, log_f = gates[..., :h], jax.nn.log_sigmoid(gates[..., h:])
+
+    def step(carry, inp):
+        c_s, n_s, m_s = carry
+        q_t, k_t, v_t, li, lf = inp                       # (B,H,hd)x3, (B,H)x2
+        m_new = jnp.maximum(lf + m_s, li)
+        f_t = jnp.exp(lf + m_s - m_new)[..., None]
+        i_t = jnp.exp(li - m_new)[..., None]
+        k32, v32 = k_t.astype(jnp.float32), v_t.astype(jnp.float32)
+        c_s = f_t[..., None] * c_s + i_t[..., None] * (
+            v32[..., :, None] * k32[..., None, :]
+        )
+        n_s = f_t * n_s + i_t * k32
+        q32 = q_t.astype(jnp.float32) / jnp.sqrt(hd)
+        num = jnp.einsum("bhvk,bhk->bhv", c_s, q32)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n_s, q32))
+        y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (c_s, n_s, m_new), y
+
+    xs = (
+        q.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        log_i.transpose(1, 0, 2),
+        log_f.transpose(1, 0, 2),
+    )
+    (c_s, n_s, m_s), ys = jax.lax.scan(step, (state["C"], state["n"], state["m"]), xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, t, d).astype(x.dtype)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5).astype(y.dtype)) * p["norm_w"]
+    out = jnp.einsum("btd,de->bte", y, p["w_out"])
+    return out, {"C": c_s, "n": n_s, "m": m_s}
+
+
+def slstm_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h, hd = xlstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": normal_init(ks[0], (d, 4 * d), dtype=dtype),        # z,i,f,o
+        "r_block": normal_init(ks[1], (h, hd, 4 * hd), dtype=dtype, scale=0.01),
+        "b_in": jnp.zeros((4 * d,), dtype=jnp.float32),
+        "w_out": normal_init(ks[2], (d, d), dtype=dtype),
+        "norm_w": jnp.ones((d,), dtype=dtype),
+    }
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    h, hd = xlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, hd), jnp.float32),
+        "n": jnp.ones((batch, h, hd), jnp.float32),
+        "m": jnp.zeros((batch, h, hd), jnp.float32),
+        "h": jnp.zeros((batch, h, hd), jnp.float32),
+    }
+
+
+def slstm_apply(p: dict, x: jax.Array, cfg: ModelConfig, state: dict | None = None):
+    bsz, t, d = x.shape
+    h, hd = xlstm_dims(cfg)
+    if state is None:
+        state = slstm_state_init(cfg, bsz)
+    wx = jnp.einsum("btd,de->bte", x, p["w_in"]).astype(jnp.float32) + p["b_in"]
+    wx = wx.reshape(bsz, t, h, 4 * hd)
+
+    def step(carry, wx_t):
+        c_s, n_s, m_s, h_s = carry
+        rec = jnp.einsum("bhk,hke->bhe", h_s, p["r_block"].astype(jnp.float32))
+        z, i, f, o = jnp.split(wx_t + rec, 4, axis=-1)     # (B,H,hd) each
+        li, lf = i, jax.nn.log_sigmoid(f)
+        m_new = jnp.maximum(lf + m_s, li)
+        i_t = jnp.exp(li - m_new)
+        f_t = jnp.exp(lf + m_s - m_new)
+        c_s = f_t * c_s + i_t * jnp.tanh(z)
+        n_s = f_t * n_s + i_t
+        h_s = jax.nn.sigmoid(o) * c_s / jnp.maximum(n_s, 1e-6)
+        return (c_s, n_s, m_new, h_s), h_s
+
+    (c_s, n_s, m_s, h_s), ys = jax.lax.scan(
+        step, (state["c"], state["n"], state["m"], state["h"]), wx.transpose(1, 0, 2, 3)
+    )
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, t, d).astype(x.dtype)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5).astype(y.dtype)) * p["norm_w"]
+    out = jnp.einsum("btd,de->bte", y, p["w_out"])
+    return out, {"c": c_s, "n": n_s, "m": m_s, "h": h_s}

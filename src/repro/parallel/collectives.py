@@ -1,0 +1,271 @@
+"""Expert-parallel dispatch/combine and sequence-parallel decode attention.
+
+``bucket_dispatch`` / ``bucket_combine`` are the static-shape, differentiable
+building blocks: token copies are sorted into fixed-capacity buckets (one
+per physical expert slot), moved with ``jax.lax.all_to_all`` across the EP
+axis under ``shard_map``, computed, and combined back with router weights.
+Capacity overflow drops copies (standard capacity-factor semantics).
+
+Physical expert *slots* (= native experts + shadow replicas) are first-class:
+the routing table ``slot_of[e, r]`` and replica counts ``n_replicas[e]`` are
+traced int32 inputs, so the NI-Balancer can re-place experts between serving
+steps without recompilation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.parallel.ctx import ParallelCtx
+
+
+# ---------------------------------------------------------------------------
+# bucket dispatch (pure jnp, static shapes, differentiable in x / weights)
+# ---------------------------------------------------------------------------
+
+def bucket_dispatch(
+    x: jax.Array,          # (n, d) token activations
+    bucket_ids: jax.Array, # (n, k) target bucket per token copy
+    n_buckets: int,
+    capacity: int,
+):
+    """Pack token copies into (n_buckets, capacity, d) buffers.
+
+    Returns ``(buffers, slots, keep)`` where ``slots[n, k]`` is the
+    within-bucket position of each copy and ``keep[n, k]`` masks copies that
+    fit under capacity. Deterministic: earlier tokens win bucket slots.
+    """
+    n, k = bucket_ids.shape
+    d = x.shape[-1]
+    flat_b = bucket_ids.reshape(-1)                       # (n*k,)
+    flat_src = jnp.repeat(jnp.arange(n), k)               # (n*k,)
+
+    order = jnp.argsort(flat_b, stable=True)
+    b_sorted = flat_b[order]
+    counts = jnp.bincount(flat_b, length=n_buckets)
+    offsets = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    idx_sorted = jnp.arange(n * k) - offsets[b_sorted]
+
+    # Undo the sort to index by (token, k).
+    slots = jnp.zeros(n * k, dtype=jnp.int32).at[order].set(idx_sorted.astype(jnp.int32))
+    keep = (slots < capacity) & (flat_b < n_buckets)  # drop out-of-range ids too
+
+    # Scatter kept copies; overflow goes to a sacrificial extra bucket row.
+    slot_b = jnp.where(keep, flat_b, n_buckets)
+    slot_i = jnp.minimum(slots, capacity - 1)
+    buffers = jnp.zeros((n_buckets + 1, capacity, d), dtype=x.dtype)
+    buffers = buffers.at[slot_b, slot_i].set(x[flat_src], mode="drop")
+    return buffers[:n_buckets], slots.reshape(n, k), keep.reshape(n, k)
+
+
+def bucket_combine(
+    y: jax.Array,            # (n_buckets, capacity, d) expert outputs
+    bucket_ids: jax.Array,   # (n, k)
+    slots: jax.Array,        # (n, k)
+    keep: jax.Array,         # (n, k)
+    weights: jax.Array,      # (n, k) router weights
+) -> jax.Array:
+    n, k = bucket_ids.shape
+    vals = y[bucket_ids.reshape(-1), jnp.minimum(slots, y.shape[1] - 1).reshape(-1)]
+    vals = vals.reshape(n, k, -1)
+    w = (weights * keep).astype(vals.dtype)
+    return jnp.einsum("nkd,nk->nd", vals, w)
+
+
+def scatter_counts(bucket_ids: jax.Array, n_buckets: int) -> jax.Array:
+    """Per-bucket token counts (n, k) -> (n_buckets,); feeds the balancer."""
+    return jnp.bincount(bucket_ids.reshape(-1), length=n_buckets)
+
+
+# ---------------------------------------------------------------------------
+# replica routing
+# ---------------------------------------------------------------------------
+
+def choose_slots(
+    expert_ids: jax.Array,   # (n, k) logical expert per copy
+    slot_of: jax.Array,      # (E, R_max) physical slot table
+    n_replicas: jax.Array,   # (E,) live replica count per expert
+) -> jax.Array:
+    """Pick a physical slot per copy, round-robin over live replicas."""
+    n, k = expert_ids.shape
+    copy_idx = (jnp.arange(n * k) % 997).reshape(n, k)  # cheap spread
+    r = copy_idx % n_replicas[expert_ids]
+    return slot_of[expert_ids, r]
+
+
+def uniform_placement(n_experts: int, n_slots: int, r_max: int = 4):
+    """Initial placement: expert e -> slot e (native homes), one replica."""
+    import numpy as np
+
+    slot_of = np.zeros((n_experts, r_max), dtype=np.int32)
+    slot_of[:, 0] = np.arange(n_experts) % n_slots
+    # Unused replica columns point at the native slot (harmless).
+    for r in range(1, r_max):
+        slot_of[:, r] = slot_of[:, 0]
+    n_replicas = np.ones(n_experts, dtype=np.int32)
+    return jnp.asarray(slot_of), jnp.asarray(n_replicas)
+
+
+# ---------------------------------------------------------------------------
+# EP all-to-all under shard_map
+# ---------------------------------------------------------------------------
+
+def ep_moe_shardmap(
+    x: jax.Array,                 # (B, S, d) — seq will be split over model axis
+    expert_ids: jax.Array,        # (B, S, k)
+    weights: jax.Array,           # (B, S, k)
+    slot_weights: dict,           # expert slot params, leading dim = total slots
+    slot_of: jax.Array,           # (E, R_max)
+    n_replicas: jax.Array,        # (E,)
+    ctx: ParallelCtx,
+    capacity_factor: float,
+    slots_per_device: int,
+    decode: bool = False,
+):
+    """Expert-parallel MoE: dispatch -> all_to_all -> GMM -> all_to_all -> combine.
+
+    ``slot_weights`` holds (n_total_slots, d, f) matrices sharded over the
+    model axis (slot dim). Inside the per-device block each device sees its
+    ``slots_per_device`` local experts and exchanges fixed-capacity buckets
+    with every peer on the EP (= model) axis.
+
+    Train/prefill mode splits the *sequence* over the EP axis (each TP rank
+    dispatches a distinct token slice — the paper's retained-AG semantics).
+    Decode mode (``s == 1``) keeps tokens replicated over the EP axis; each
+    rank owns tokens with ``idx % ep == rank`` and a final psum restores
+    replication.
+    """
+    mesh = ctx.mesh
+    axis = ctx.model_axis
+    ep = ctx.n_model
+    total_slots = ep * slots_per_device
+
+    b, s, d = x.shape
+    k = expert_ids.shape[-1]
+    if decode:
+        n_tok = max(b // ctx.n_batch, 1)           # distinct tokens per EP group
+    else:
+        n_tok = b * s // (ctx.n_batch * ep)        # tokens per device, seq split
+    cap = max(int(n_tok * k * capacity_factor / total_slots), 8)
+
+    def body(x_blk, eid_blk, w_blk, wg, wu, wd, slot_of_, n_rep_):
+        # x_blk: (B_loc, S_loc, d) — this device's token slice.
+        bl, sl, _ = x_blk.shape
+        xt = x_blk.reshape(bl * sl, d)
+        eid = eid_blk.reshape(bl * sl, k)
+        w = w_blk.reshape(bl * sl, k)
+
+        slots = choose_slots(eid, slot_of_, n_rep_)           # physical slot
+        if decode:
+            # Tokens are replicated across the EP axis: rank r owns
+            # idx % ep == r; unowned copies overflow out of every bucket.
+            rank = jax.lax.axis_index(axis)
+            owned = (jnp.arange(bl * sl) % ep) == rank
+            slots = jnp.where(owned[:, None], slots, total_slots + 1)
+        bufs, pos, keep = bucket_dispatch(xt, slots, total_slots, cap)
+        # (total_slots, cap, d) -> exchange so each device gets its slots.
+        bufs = bufs.reshape(ep, slots_per_device, cap, d)
+        recv = jax.lax.all_to_all(bufs, axis, split_axis=0, concat_axis=0, tiled=False)
+        # recv: (ep, slots_per_device, cap, d) — axis 0 now = source rank.
+        recv = recv.transpose(1, 0, 2, 3).reshape(slots_per_device, ep * cap, d)
+
+        # Local expert compute: slot e uses weight row e.
+        h = jnp.einsum("ecd,edf->ecf", recv, wg)
+        u = jnp.einsum("ecd,edf->ecf", recv, wu)
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, wd)
+
+        y = y.reshape(slots_per_device, ep, cap, d).transpose(1, 0, 2, 3)
+        back = jax.lax.all_to_all(y, axis, split_axis=0, concat_axis=0, tiled=False)
+        back = back.reshape(total_slots, cap, d)
+        out = bucket_combine(back, slots, pos, keep, w)
+        if decode:
+            out = jax.lax.psum(out, axis)  # gather owners' results everywhere
+        return out.reshape(bl, sl, d)
+
+    bspec = ctx.batch_spec
+    seq_spec = None if decode else axis
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, seq_spec, None),      # x: sequence split over model axis
+            P(bspec, seq_spec, None),
+            P(bspec, seq_spec, None),
+            P(axis, None, None),           # slot weights: slot dim over model
+            P(axis, None, None),
+            P(axis, None, None),
+            P(None, None),                 # routing tables replicated
+            P(None),
+        ),
+        out_specs=P(bspec, seq_spec, None),
+        check_vma=False,
+    )(
+        x,
+        expert_ids,
+        weights,
+        slot_weights["w_gate"],
+        slot_weights["w_up"],
+        slot_weights["w_down"],
+        slot_of,
+        n_replicas,
+    )
+
+
+# ---------------------------------------------------------------------------
+# sequence-parallel flash-decode merge
+# ---------------------------------------------------------------------------
+
+def seq_parallel_decode_attend(
+    q: jax.Array,        # (B, 1, H, hd) — replicated over model axis
+    k_cache: jax.Array,  # (B, L, K, hd) — L sharded over model axis
+    v_cache: jax.Array,
+    mask: jax.Array,     # (L,) validity, sharded like the cache
+    ctx: ParallelCtx,
+) -> jax.Array:
+    """Flash-decode across the model axis: each shard attends over its KV
+    chunk with a local log-sum-exp, partial results merge with a psum."""
+    mesh = ctx.mesh
+    axis = ctx.model_axis
+
+    def body(q_blk, k_blk, v_blk, m_blk):
+        b, _, nh, hd = q_blk.shape
+        nk = k_blk.shape[2]
+        g = nh // nk
+        qg = q_blk.reshape(b, 1, nk, g, hd)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, k_blk).astype(jnp.float32)
+        s = s / jnp.sqrt(hd).astype(jnp.float32)
+        s = jnp.where(m_blk[None, None, None, None, :], s, -1e30)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        # Guard fully-masked chunks.
+        m_safe = jnp.maximum(m, -1e29)
+        e = jnp.exp(s - m_safe)
+        num = jnp.einsum("bkgst,btkd->bskgd", e.astype(v_blk.dtype), v_blk)
+        den = jnp.sum(e, axis=-1)[..., None]              # (b,k,g,1,1)->align
+        den = den.transpose(0, 3, 1, 2, 4)                # (b,1,k,g,1)
+        # Global LSE merge across shards.
+        m_b = m.transpose(0, 3, 1, 2, 4)                  # (b,1,k,g,1)
+        m_max = jax.lax.pmax(m_b, axis)
+        scale = jnp.exp(m_b - m_max)
+        num = jax.lax.psum(num * scale.astype(num.dtype), axis)
+        den = jax.lax.psum(den * scale, axis)
+        out = num / jnp.maximum(den, 1e-30).astype(num.dtype)
+        return out.reshape(b, 1, nh, hd)
+
+    bspec = ctx.batch_spec
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None, None, None),
+            P(bspec, axis, None, None),
+            P(bspec, axis, None, None),
+            P(axis),
+        ),
+        out_specs=P(bspec, None, None, None),
+        check_vma=False,
+    )(q, k_cache, v_cache, mask)

@@ -1,0 +1,90 @@
+"""Parallel context threaded through model code.
+
+Carries the mesh axis conventions and implementation switches. When ``mesh``
+is ``None`` (CPU smoke tests) every sharding helper is a no-op and reference
+implementations are used, so the same model code runs everywhere.
+
+Axis conventions (matching ``repro.launch.mesh``):
+
+* ``data`` (and optionally ``pod``) — batch / DP / the paper's FTD-exterior
+  dimension,
+* ``model`` — TP / EP: attention heads, FFN hidden, vocab, experts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: jax.sharding.Mesh | None = None
+    batch_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    moe_impl: str = "auto"           # auto | dense | ep | esp
+    remat: bool = False
+    capacity_factor: float = 2.0     # MoE dispatch capacity
+    # decode: shard the KV sequence dim over the model axis (flash-decode
+    # style sequence parallelism) instead of replicating the cache.
+    seq_parallel_kv: bool = True
+    # Cost-probe mode (launch.dryrun): fully unroll layer scans and use the
+    # dense attention path so XLA's cost analysis sees every FLOP (it counts
+    # a while-loop body only once).
+    full_unroll: bool = False
+    force_dense_attn: bool = False
+    # Megatron-style sequence parallelism for the residual stream: block
+    # outputs reduce-scatter to seq-sharded form; the next projection's
+    # all-gather is the paper's "retained AG" (§Perf iterations 4-5).
+    seq_parallel_acts: bool = False
+
+    @property
+    def seq_spec(self):
+        return self.model_axis if self.seq_parallel_acts else None
+
+    @property
+    def batch_spec(self):
+        if not self.batch_axes:
+            return None  # batch too small to shard (e.g. long-context B=1)
+        return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+
+    def shard(self, x, *spec):
+        """``with_sharding_constraint`` under a mesh; identity otherwise.
+
+        Axes that do not divide the corresponding dimension are dropped
+        (replicated) instead of erroring — this keeps one model codebase
+        valid across GQA head counts, tiny batches and arbitrary meshes.
+        """
+        if self.mesh is None:
+            return x
+        clean = []
+        for dim, sp in zip(x.shape, spec):
+            if sp is None:
+                clean.append(None)
+                continue
+            axes = sp if isinstance(sp, tuple) else (sp,)
+            n = 1
+            for a in axes:
+                n *= self.mesh.shape[a]
+            clean.append(sp if dim % n == 0 else None)
+        return jax.lax.with_sharding_constraint(x, P(*clean))
+
+    @property
+    def n_model(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def n_batch(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+NO_MESH = ParallelCtx()

@@ -1,0 +1,186 @@
+"""Sharding policy: PartitionSpecs for every param/cache/input leaf.
+
+One rule table drives all ten architectures. Conventions:
+
+* ``model`` axis carries TP/EP: attention head projections, FFN hidden,
+  vocab (embed rows / lm_head cols), expert slot rows (EP regime) or expert
+  hidden dims (ESP regime), Mamba inner channels.
+* batch axes (``data`` or ``("pod","data")``) carry tokens; a dimension is
+  only sharded when it divides evenly (``_ok``), otherwise it degrades to
+  replication — this is what makes restore-onto-any-mesh and odd global
+  batches (long_500k's batch=1) work without special cases.
+* xLSTM blocks keep weights replicated (attention-free 350M model — DP-only
+  is the right layout; see DESIGN.md §5).
+
+``state_specs`` covers the train state (params + AdamW moments mirror the
+param layout), ``cache_specs`` mirrors ``transformer.init_cache``.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.parallel.ctx import ParallelCtx
+
+
+def _ok(dim: int, n: int) -> bool:
+    return n > 1 and dim % n == 0
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_spec(path: str, shape: tuple[int, ...], cfg: ModelConfig, n_model: int) -> P:
+    """PartitionSpec for one parameter leaf (leading stacked-layer dims are
+    never sharded)."""
+    none = P(*(None,) * len(shape))
+    if n_model <= 1 or cfg.block_pattern == "xlstm":
+        return none
+    name = path.split("/")[-1]
+
+    def last(axis_from_end=1):
+        if not _ok(shape[-axis_from_end], n_model):
+            return none
+        spec = [None] * len(shape)
+        spec[len(shape) - axis_from_end] = "model"
+        return P(*spec)
+
+    if name == "embed":
+        return P("model", None) if _ok(shape[0], n_model) else none
+    if name == "lm_head":
+        return last(1)
+    if name in ("wq", "wk", "wv", "bq", "bk", "bv"):
+        return last(1)
+    if name == "wo":
+        return last(2)
+    if "moe" in path:
+        if name == "router":
+            return none
+        # EP regime: shard expert/slot rows; ESP regime: shard hidden dim.
+        slot_dim = len(shape) - 3          # (..., S, d, f) or (..., S, f, d)
+        if _ok(shape[slot_dim], n_model):
+            spec = [None] * len(shape)
+            spec[slot_dim] = "model"
+            return P(*spec)
+        if name in ("w_gate", "w_up"):
+            return last(1)
+        if name == "w_down":
+            return last(2)
+        return none
+    if name in ("w_gate", "w_up"):         # dense SwiGLU
+        return last(1)
+    if name == "w_down":
+        return last(2)
+    # Mamba2
+    if name in ("w_z", "w_xbc", "conv_w", "conv_b"):
+        return last(1)
+    if name == "w_out" and "mamba" in path:
+        return last(2)
+    if name in ("norm_w", "a_log", "dt_bias", "d_skip"):
+        return last(1) if name == "norm_w" else none
+    return none
+
+
+def params_specs(cfg: ModelConfig, params_shapes, ctx: ParallelCtx):
+    """Pytree of PartitionSpec matching a params(-shaped) tree."""
+    n_model = ctx.n_model
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = [
+        param_spec(_path_str(p), tuple(leaf.shape), cfg, n_model)
+        for p, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(tdef, specs)
+
+
+def state_specs(cfg: ModelConfig, state_shapes, ctx: ParallelCtx):
+    """Train state: params + fp32 moments share the param layout."""
+    return {
+        "params": params_specs(cfg, state_shapes["params"], ctx),
+        "opt": {
+            "step": P(),
+            "mu": params_specs(cfg, state_shapes["opt"]["mu"], ctx),
+            "nu": params_specs(cfg, state_shapes["opt"]["nu"], ctx),
+        },
+    }
+
+
+def batch_spec_for(global_batch: int, ctx: ParallelCtx):
+    n = ctx.n_batch
+    if n > 1 and global_batch % n == 0:
+        return ctx.batch_spec
+    return None
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes, ctx: ParallelCtx, batch: int):
+    """PartitionSpecs mirroring ``transformer.init_cache`` exactly."""
+    bs = batch_spec_for(batch, ctx)
+    m = ctx.model_axis
+    n_model = ctx.n_model
+
+    def kv_spec(shape):
+        # (L?, B, S, K, hd): shard S over model (flash-decode seq-parallel)
+        # when divisible, else KV heads, else replicate.
+        spec = [None] * len(shape)
+        spec[-4] = bs
+        if ctx.seq_parallel_kv and _ok(shape[-3], n_model):
+            spec[-3] = m
+        elif _ok(shape[-2], n_model):
+            spec[-2] = m
+        return P(*spec)
+
+    def bdim_spec(shape, b_from_end, model_from_end=None):
+        spec = [None] * len(shape)
+        spec[len(shape) - b_from_end] = bs
+        if model_from_end and _ok(shape[-model_from_end], n_model):
+            spec[len(shape) - model_from_end] = m
+        return P(*spec)
+
+    pat = cfg.block_pattern
+    specs: dict = {"pos": P()}
+    if pat in ("attn", "encdec"):
+        specs["layers"] = {
+            "k": kv_spec(cache_shapes["layers"]["k"].shape),
+            "v": kv_spec(cache_shapes["layers"]["v"].shape),
+        }
+        if pat == "encdec":
+            specs["cross_kv"] = tuple(
+                kv_spec(x.shape) for x in cache_shapes["cross_kv"]
+            )
+    elif pat == "zamba":
+        def mamba_state_spec(tree):
+            return {
+                # conv: (..., B, CW, channels) — channels on model axis
+                "conv": bdim_spec(tree["conv"].shape, 3, 1),
+                # ssm: (..., B, H, hd, N) — heads on model axis
+                "ssm": bdim_spec(tree["ssm"].shape, 4, 3),
+            }
+        specs["units_ssm"] = mamba_state_spec(cache_shapes["units_ssm"])
+        specs["trailing_ssm"] = mamba_state_spec(cache_shapes["trailing_ssm"])
+        specs["shared_kv"] = {
+            "k": kv_spec(cache_shapes["shared_kv"]["k"].shape),
+            "v": kv_spec(cache_shapes["shared_kv"]["v"].shape),
+        }
+    elif pat == "xlstm":
+        specs["m"] = {
+            "C": bdim_spec(cache_shapes["m"]["C"].shape, 4),
+            "n": bdim_spec(cache_shapes["m"]["n"].shape, 3),
+            "m": bdim_spec(cache_shapes["m"]["m"].shape, 2),
+        }
+        specs["s"] = {
+            k: bdim_spec(cache_shapes["s"][k].shape, 3)
+            for k in ("c", "n", "m", "h")
+        }
+    return specs
+
+
+def to_shardings(mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,102 @@
+"""Elastic scaling & failure handling glue.
+
+Training-side story (the 1000+ node contract):
+
+1. every N steps the loop calls ``CheckpointManager.async_save`` (params +
+   optimizer + data cursor);
+2. on node failure the job restarts on the surviving pool — ``make_mesh``
+   with the new device count, ``restore_elastic`` re-places the same host
+   arrays under the new shardings, the data pipeline resumes from the
+   stored step (deterministic ``batch_at``);
+3. a changed ``data``-axis size only changes *throughput*; per-step
+   semantics stay identical because the global batch is respecified, not
+   resharded from device state.
+
+Serving-side: ``Server.mark_dead`` + Algorithm 1 evacuate experts; decode
+batches re-route around the dead device (heat = inf).
+
+Straggler mitigation: ``StepTimer`` tracks per-step wall times and flags
+outliers (>1.5x median EMA) so the caller can feed ``report_step_time``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.runtime.checkpoint import CheckpointManager
+
+
+def restore_elastic(mgr: CheckpointManager, template, mesh, sharding_fn):
+    """Restore the latest checkpoint onto an arbitrary mesh.
+
+    ``sharding_fn(mesh, template) -> pytree of NamedSharding`` encodes the
+    layout policy; arrays come back host-side and are placed fresh, so the
+    previous run's device count is irrelevant.
+    """
+    shardings = sharding_fn(mesh, template) if mesh is not None else None
+    return mgr.restore(template, shardings=shardings)
+
+
+class StepTimer:
+    """EMA step timer with straggler detection."""
+
+    def __init__(self, alpha: float = 0.9, threshold: float = 1.5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ema: float | None = None
+        self._t0: float | None = None
+
+    def __enter__(self):
+        self._t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.monotonic() - self._t0
+        self.last = dt
+        self.ema = dt if self.ema is None else self.alpha * self.ema + (1 - self.alpha) * dt
+
+    @property
+    def is_straggling(self) -> bool:
+        return self.ema is not None and self.last > self.threshold * self.ema
+
+    @property
+    def ratio(self) -> float:
+        if self.ema is None or self.ema == 0:
+            return 1.0
+        return float(self.last / self.ema)
+
+
+def drill_failure(server, device: int, steps_to_recover: int = 5) -> dict:
+    """Fault-injection drill: kill a device, run the balancer, report how
+    quickly peak heat recovers. Used by tests and the ops runbook."""
+    state = server.state
+    if state is None:
+        return {"supported": False}
+    before = float(np.max(state.heats()[np.isfinite(state.heats())]))
+    from repro.core.ni_balancer import evacuate, topology_aware_balance
+
+    # Availability first (replicate orphaned experts), then rebalance load.
+    plan = evacuate(state, device, server.distance)
+    # evacuate() already applied to the balancer state; mirror the slot
+    # table + weight copies on the server.
+    for m in plan:
+        server._mirror_migration(m)
+    migs = topology_aware_balance(state, server.distance)
+    for m in migs:
+        server._apply_migration(m)
+    heats = state.heats()
+    after = float(np.max(heats[np.isfinite(heats)]))
+    evacuated = all(
+        any(d != device for d in state.replicas[e])
+        for e in range(state.n_experts)
+        if device in state.replicas[e]
+    )
+    return {
+        "supported": True,
+        "migrations": len(plan) + len(migs),
+        "peak_before": before,
+        "peak_after": after,
+        "evacuated": evacuated,
+    }

@@ -1,0 +1,208 @@
+"""Serving runtime: batched decode with the NI-Balancer in the loop.
+
+The ``Server`` owns
+
+* jitted prefill/decode closures (cache donated, placement traced),
+* physical expert *slot* weights — ``(L, n_slots, d, f)`` rows, i.e. native
+  experts + shadow-slot replicas, slot dim sharded over the model axis,
+* a :class:`repro.core.ni_balancer.BalancerState` fed by the per-step
+  expert counts the model emits,
+* the ER-Mapping-derived hop distance used by Algorithm 1.
+
+Every decode step: route -> dispatch -> observe counts -> (Eq. 2 trigger)
+-> plan with Algorithm 1 -> apply placement (slot table update + expert
+weight row copy = the migration's data movement; its *schedule* across cold
+links is validated in the analytical evaluator — see DESIGN.md §3).
+
+Device failures: ``mark_dead`` pins the device's heat to infinity, so the
+next balancing pass evacuates its experts to shadow slots elsewhere.
+Stragglers: per-device step-time EMAs scale heats, draining load away.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.ni_balancer import (
+    BalancerState,
+    should_trigger,
+    topology_aware_balance,
+)
+from repro.models import transformer as T
+from repro.parallel.collectives import uniform_placement
+from repro.parallel.ctx import ParallelCtx
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 1024
+    batch: int = 8
+    slots_per_device: int = 2      # native + shadow capacity per device
+    alpha: float = 0.5             # Eq. 2 imbalance threshold
+    beta: float = 0.0              # Eq. 2 refractory (0 = non-invasive)
+    ema: float = 0.8
+
+
+class Server:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        ctx: ParallelCtx,
+        params,
+        serve_cfg: ServeConfig = ServeConfig(),
+        distance=None,
+    ):
+        self.cfg = cfg
+        self.ctx = ctx
+        self.scfg = serve_cfg
+        self.params = params
+        self.ep = ctx.n_model
+        self.use_balancer = cfg.is_moe and self.ep > 1
+        self.distance = distance or (lambda a, b: abs(a - b))
+        self.t = 0
+        self.last_mig = -(10**9)
+        self.migrations = 0
+
+        if self.use_balancer:
+            spd = serve_cfg.slots_per_device
+            n_slots = self.ep * spd
+            if n_slots < cfg.n_experts:
+                raise ValueError("not enough slots for native experts")
+            # Expand per-layer expert rows to physical slots (slot s holds
+            # expert s % E initially).
+            rows = np.arange(n_slots) % cfg.n_experts
+            for w in ("w_gate", "w_up", "w_down"):
+                arr = self.params["layers"]["moe"][w]
+                self.params["layers"]["moe"][w] = jnp.take(arr, rows, axis=1)
+            self.slot_of, self.n_replicas = uniform_placement(
+                cfg.n_experts, n_slots
+            )
+            # Expert e natively lives in slot e, i.e. on device e // spd —
+            # the balancer state must mirror the physical slot layout.
+            self.state = BalancerState(
+                n_experts=cfg.n_experts,
+                n_devices=self.ep,
+                slots_per_device=spd,
+                replicas=[[e // spd] for e in range(cfg.n_experts)],
+                load_ema=np.ones(cfg.n_experts) / cfg.n_experts,
+                ema_decay=serve_cfg.ema,
+            )
+        else:
+            self.slot_of = self.n_replicas = None
+            self.state = None
+
+        self._decode = jax.jit(
+            functools.partial(T.decode_step, cfg=cfg, ctx=ctx),
+            donate_argnums=(1,),
+        )
+        self._prefill = jax.jit(
+            functools.partial(
+                T.prefill, cfg=cfg, ctx=ctx, max_seq=serve_cfg.max_seq
+            ),
+            static_argnames=(),
+        )
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def prefill(self, tokens, embeds=None):
+        logits, cache = self._prefill(self.params, tokens, embeds=embeds)
+        return logits, cache
+
+    def decode(self, token, cache):
+        placement = (
+            (self.slot_of, self.n_replicas) if self.use_balancer else None
+        )
+        logits, cache, stats = self._decode(
+            self.params, token, cache, placement=placement
+        )
+        self.t += 1
+        if self.use_balancer:
+            counts = np.asarray(stats["expert_counts"])
+            self.state.observe(counts)
+            self._maybe_balance(counts)
+        return logits, cache
+
+    def generate(self, prompt, n_tokens: int, embeds=None):
+        logits, cache = self.prefill(prompt, embeds=embeds)
+        out = []
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        for _ in range(n_tokens):
+            out.append(tok)
+            logits, cache = self.decode(tok, cache)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return jnp.concatenate(out, axis=1)
+
+    # -- balancing -----------------------------------------------------------
+
+    def _maybe_balance(self, counts):
+        if not should_trigger(
+            [counts], self.scfg.alpha, self.t - self.last_mig, self.scfg.beta
+        ):
+            return
+        plan = topology_aware_balance(self.state, self.distance)
+        if not plan:
+            return
+        self.last_mig = self.t
+        for mig in plan:
+            self._apply_migration(mig)
+        self.migrations += len(plan)
+
+    def _free_slot(self, device: int) -> int | None:
+        spd = self.scfg.slots_per_device
+        used = set()
+        slot_of = np.asarray(self.slot_of)
+        n_rep = np.asarray(self.n_replicas)
+        for e in range(self.cfg.n_experts):
+            for r in range(n_rep[e]):
+                used.add(int(slot_of[e, r]))
+        for s in range(device * spd, (device + 1) * spd):
+            if s not in used:
+                return s
+        return None
+
+    def _apply_migration(self, mig, update_state: bool = True):
+        e, _src, dst = mig
+        slot = self._free_slot(dst)
+        if slot is None:
+            return
+        # Data movement: copy the expert's weight rows into the shadow slot
+        # (a device-to-device transfer under the slot sharding).
+        src_slot = int(np.asarray(self.slot_of)[e, 0])
+        moe = self.params["layers"]["moe"]
+        for w in ("w_gate", "w_up", "w_down"):
+            moe[w] = moe[w].at[:, slot].set(moe[w][:, src_slot])
+        r = int(np.asarray(self.n_replicas)[e])
+        self.slot_of = self.slot_of.at[e, min(r, self.slot_of.shape[1] - 1)].set(slot)
+        self.n_replicas = self.n_replicas.at[e].set(
+            min(r + 1, self.slot_of.shape[1])
+        )
+        if update_state:
+            self.state.apply(mig)
+
+    def _mirror_migration(self, mig):
+        """Physical half only — for plans already applied to the balancer
+        state (e.g. evacuation)."""
+        self._apply_migration(mig, update_state=False)
+
+    # -- fault tolerance ------------------------------------------------------
+
+    def mark_dead(self, device: int):
+        """Node failure: evacuate by rebalancing away from the dead device."""
+        if self.state is not None:
+            self.state.mark_dead(device)
+
+    def report_step_time(self, device: int, ratio: float):
+        """Straggler mitigation: fold measured step-time ratio into heats."""
+        if self.state is None:
+            return
+        if self.state.slowdown is None:
+            self.state.slowdown = np.ones(self.ep)
+        self.state.slowdown[device] = (
+            0.8 * self.state.slowdown[device] + 0.2 * ratio
+        )

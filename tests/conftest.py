@@ -1,0 +1,9 @@
+import os
+import sys
+
+# src-layout import path (tests also run without installation).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: deliberately no xla_force_host_platform_device_count here — smoke
+# tests and benches must see the real single device. Multi-device scenarios
+# run in subprocesses (tests/test_multidevice.py) with their own XLA_FLAGS.

@@ -1,0 +1,52 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import MeshTopology
+
+
+@given(
+    st.integers(2, 8), st.integers(2, 8),
+    st.integers(0, 63), st.integers(0, 63),
+)
+@settings(max_examples=60, deadline=None)
+def test_route_length_is_manhattan(rows, cols, a, b):
+    topo = MeshTopology(rows, cols)
+    ca = topo.coord(a % topo.n_devices)
+    cb = topo.coord(b % topo.n_devices)
+    route = topo.route(ca, cb)
+    assert len(route) == topo.hops(ca, cb)
+    # route is connected and ends at the destination
+    if route:
+        assert route[0][0] == topo.device_id(ca)
+        assert route[-1][1] == topo.device_id(cb)
+        for (u1, v1), (u2, v2) in zip(route, route[1:]):
+            assert v1 == u2
+
+
+def test_links_bidirectional_and_counted_once():
+    topo = MeshTopology(3, 4)
+    links = set(topo.links)
+    assert len(links) == len(topo.links)
+    for (u, v) in topo.links:
+        assert (v, u) in links
+    # 2D mesh: directed links = 2*(r*(c-1) + c*(r-1))
+    assert topo.n_links == 2 * (3 * 3 + 4 * 2)
+
+
+def test_link_loads_conservation():
+    topo = MeshTopology(4, 4)
+    traffic = {(0, 15): 10.0, (5, 6): 2.0}
+    loads = topo.link_loads(traffic)
+    # total link-bytes = sum(vol * hops)
+    expected = 10.0 * topo.hops((0, 0), (3, 3)) + 2.0 * 1
+    assert loads.sum() == pytest.approx(expected)
+
+
+def test_multi_wafer_geometry():
+    topo = MeshTopology(4, 4, n_wafers=2)
+    assert topo.n_devices == 32
+    assert topo.global_cols == 8
+    cross = [l for l in topo.links if topo.is_cross_wafer(l)]
+    assert len(cross) == 2 * 4  # 4 border rows, both directions
+    assert topo.wafer_of((0, 5)) == 1

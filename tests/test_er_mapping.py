@@ -1,0 +1,90 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.er_mapping import (
+    baseline_mapping,
+    er_mapping,
+    factor_pair,
+    grid_cycle,
+    hierarchical_er_mapping,
+)
+from repro.core.ftd import ftd_stats
+from repro.core.topology import MeshTopology
+
+
+@given(st.integers(1, 9), st.integers(1, 9))
+@settings(max_examples=50, deadline=None)
+def test_grid_cycle_visits_all_unit_steps(h, w):
+    cyc = grid_cycle(h, w)
+    assert sorted(cyc) == sorted((r, c) for r in range(h) for c in range(w))
+    for (r1, c1), (r2, c2) in zip(cyc, cyc[1:]):
+        assert abs(r1 - r2) + abs(c1 - c2) == 1
+    if (h % 2 == 0 or w % 2 == 0) and h > 1 and w > 1:
+        # true Hamiltonian cycle: closing step is also unit length
+        (r1, c1), (r2, c2) = cyc[-1], cyc[0]
+        assert abs(r1 - r2) + abs(c1 - c2) == 1
+
+
+def _check_mapping_invariants(m):
+    topo = m.topo
+    # every device appears in exactly one TP group and one FTD
+    seen = sorted(d for g in m.tp_groups for d in g)
+    assert seen == list(range(topo.n_devices))
+    seen = sorted(d for f in m.ftds for d in f)
+    assert seen == list(range(topo.n_devices))
+    # each FTD holds exactly one member of every TP group
+    for f in m.ftds:
+        groups = sorted(int(m.group_of[d]) for d in f)
+        assert groups == list(range(m.dp))
+
+
+@pytest.mark.parametrize("ctor", [baseline_mapping, er_mapping])
+@pytest.mark.parametrize("rows,cols,dp,tp", [(4, 4, 4, 4), (6, 6, 6, 6), (8, 8, 4, 16), (8, 8, 16, 4)])
+def test_mapping_invariants(ctor, rows, cols, dp, tp):
+    m = ctor(MeshTopology(rows, cols), dp, tp)
+    _check_mapping_invariants(m)
+
+
+def test_paper_fig8_numbers():
+    """Fig. 8: baseline 4x4 has ~2.7 avg FTD hops, intersecting FTDs;
+    ER-Mapping halves hops to 1.33 and removes all intersections."""
+    topo = MeshTopology(4, 4)
+    sb = ftd_stats(baseline_mapping(topo, 4, 4))
+    se = ftd_stats(er_mapping(topo, 4, 4))
+    assert sb.avg_hops == pytest.approx(8 / 3, abs=0.01)   # "2.7 hops"
+    assert se.avg_hops == pytest.approx(4 / 3, abs=0.01)   # 2x reduction
+    assert sb.n_intersecting_pairs > 0
+    assert se.n_intersecting_pairs == 0
+
+
+def test_er_ring_hop_is_tile_pitch():
+    topo = MeshTopology(4, 4)
+    mb = baseline_mapping(topo, 4, 4)
+    me = er_mapping(topo, 4, 4)
+    assert mb.max_ring_hop() == 1      # contiguous blocks: unit ring steps
+    assert me.max_ring_hop() == 2      # entwined rings: two-hop steps
+
+
+def test_device_order_is_permutation():
+    m = er_mapping(MeshTopology(8, 8), 8, 8)
+    order = m.device_order()
+    assert order.shape == (8, 8)
+    assert sorted(order.ravel().tolist()) == list(range(64))
+
+
+def test_hierarchical_mapping_multi_wafer():
+    topo = MeshTopology(4, 4, n_wafers=2)
+    m = hierarchical_er_mapping(topo, 4, 8)
+    _check_mapping_invariants(m)
+    # group ranks are striped across wafers: half the members per wafer
+    for g in range(4):
+        wafers = [m.topo.wafer_of(m.topo.coord(d)) for d in m.tp_groups[g]]
+        assert wafers.count(0) == 4 and wafers.count(1) == 4
+
+
+def test_factor_pair_prefers_square():
+    assert factor_pair(16, 16, 16) == (4, 4)
+    assert factor_pair(8, 4, 4) == (2, 4) or factor_pair(8, 4, 4) == (4, 2)
+    with pytest.raises(ValueError):
+        factor_pair(7, 4, 4)

@@ -1,0 +1,73 @@
+import numpy as np
+import pytest
+
+from repro.core.comm_model import A2AWorkload, link_heatmaps
+from repro.core.er_mapping import er_mapping
+from repro.core.hardware import WSC
+from repro.core.migration import MigrationEngine, decompose
+from repro.core.topology import MeshTopology
+
+EXPERT_BYTES = 42e6  # DeepSeek-V3 expert
+
+
+@pytest.fixture
+def setup():
+    topo = MeshTopology(4, 4)
+    m = er_mapping(topo, 4, 4)
+    ar, a2a = link_heatmaps(m, WSC, 256 * 4096 * 2, A2AWorkload(256, 8192, 8))
+    return topo, m, ar, a2a
+
+
+def test_decompose_structure(setup):
+    topo, m, *_ = setup
+    # same FTD -> single local step
+    f0 = m.ftds[0]
+    steps = decompose((0, f0[0], f0[1]), m, EXPERT_BYTES)
+    assert [s.kind for s in steps] == ["local"]
+    # cross-FTD -> local/global/local with matching endpoints
+    src, dst = m.ftds[0][0], m.ftds[3][3]
+    steps = decompose((0, src, dst), m, EXPERT_BYTES)
+    kinds = [s.kind for s in steps]
+    assert "global" in kinds
+    assert steps[0].src == src and steps[-1].dst == dst
+    for s1, s2 in zip(steps, steps[1:]):
+        assert s1.dst == s2.src
+
+
+def test_noninvasive_completes_with_zero_exposure(setup):
+    topo, m, ar, a2a = setup
+    eng = MigrationEngine(m, WSC, EXPERT_BYTES, mode="noninvasive")
+    exposed = eng.submit([(0, m.ftds[0][0], m.ftds[3][3])])
+    assert exposed == 0.0
+    for _ in range(200):
+        eng.step_iteration(1e-3, 1e-3, ar, a2a)
+        if eng.pending == 0:
+            break
+    assert eng.pending == 0
+    assert eng.total_exposed == 0.0
+
+
+def test_invasive_exposes_route_time(setup):
+    topo, m, *_ = setup
+    eng = MigrationEngine(m, WSC, EXPERT_BYTES, mode="invasive")
+    exposed = eng.submit([(0, 0, 15)])
+    assert exposed > 0
+    assert eng.total_exposed == exposed
+
+
+def test_noninvasive_slower_when_links_hot(setup):
+    """With saturated links (tiny phases) migrations take more iterations."""
+    topo, m, ar, a2a = setup
+    fast = MigrationEngine(m, WSC, EXPERT_BYTES)
+    slow = MigrationEngine(m, WSC, EXPERT_BYTES)
+    mig = [(0, m.ftds[0][0], m.ftds[3][3])]
+    fast.submit(list(mig))
+    slow.submit(list(mig))
+    it_fast = it_slow = 0
+    while fast.pending and it_fast < 500:
+        fast.step_iteration(1e-3, 1e-3, ar, a2a)
+        it_fast += 1
+    while slow.pending and it_slow < 500:
+        slow.step_iteration(2e-6, 2e-6, ar, a2a)
+        it_slow += 1
+    assert it_fast <= it_slow

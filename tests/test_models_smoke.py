@@ -1,0 +1,106 @@
+"""Per-arch smoke tests: reduced same-family configs, one forward + train
+step on CPU, asserting shapes and finiteness (the assignment's required
+SMOKE coverage), plus prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, shapes_for, smoke
+from repro.models import transformer as T
+from repro.parallel.ctx import NO_MESH
+from repro.runtime.optimizer import AdamWConfig
+from repro.runtime.train import init_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, rng, b=2, s=16):
+    tokens = jax.random.randint(rng, (b, s), 0, cfg.vocab_size)
+    embeds = None
+    if cfg.frontend_stub:
+        embeds = (
+            jax.random.normal(rng, (b, cfg.frontend_tokens, cfg.d_model)) * 0.02
+        )
+    return tokens, embeds
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finiteness(arch, rng):
+    cfg = smoke(get_config(arch))
+    params = T.init_params(rng, cfg)
+    tokens, embeds = _inputs(cfg, rng)
+    logits, aux = T.forward(params, tokens, cfg, NO_MESH, embeds=embeds)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux["loss"]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch, rng):
+    cfg = smoke(get_config(arch))
+    state = init_state(rng, cfg)
+    step = jax.jit(make_train_step(cfg, NO_MESH, AdamWConfig(total_steps=10)))
+    tokens, embeds = _inputs(cfg, rng)
+    batch = {"tokens": tokens, "labels": tokens}
+    if embeds is not None:
+        batch["embeds"] = embeds
+    state, met = step(state, batch)
+    assert np.isfinite(float(met["loss"]))
+    assert float(met["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch, rng):
+    """decode(t) after prefill(0..t-1) must match full forward at position t."""
+    cfg = smoke(get_config(arch))
+    params = T.init_params(rng, cfg)
+    tokens, embeds = _inputs(cfg, rng)
+    logits, _ = T.forward(params, tokens, cfg, NO_MESH, embeds=embeds)
+    # cache must leave decode headroom beyond prompt (+frontend) length
+    max_seq = 16 + (cfg.frontend_tokens if cfg.frontend_stub else 0) + 8
+    lp, cache = T.prefill(
+        params, tokens, cfg, NO_MESH, embeds=embeds, max_seq=max_seq
+    )
+    np.testing.assert_allclose(
+        np.asarray(lp[:, 0]), np.asarray(logits[:, -1]), rtol=1e-4, atol=1e-4
+    )
+    nxt = jnp.argmax(lp[:, 0:1], -1).astype(tokens.dtype)
+    ext = jnp.concatenate([tokens, nxt], axis=1)
+    logits2, _ = T.forward(params, ext, cfg, NO_MESH, embeds=embeds)
+    ld, _, _ = T.decode_step(params, nxt, cache, cfg, NO_MESH)
+    np.testing.assert_allclose(
+        np.asarray(ld[:, 0]), np.asarray(logits2[:, -1]), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_assigned_shapes_present(arch):
+    cfg = get_config(arch)
+    names = {s.name for s in shapes_for(cfg)}
+    assert {"train_4k", "prefill_32k", "decode_32k"} <= names
+    if cfg.subquadratic:
+        assert "long_500k" in names
+
+
+def test_exact_assigned_dimensions():
+    """The registry must carry the exact assigned architecture parameters."""
+    q = get_config("qwen2-72b")
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads) == (80, 8192, 64, 8)
+    assert (q.d_ff, q.vocab_size, q.qkv_bias) == (29568, 152064, True)
+    d = get_config("dbrx-132b")
+    assert (d.n_experts, d.experts_per_token) == (16, 4)
+    m = get_config("mixtral-8x22b")
+    assert (m.n_experts, m.experts_per_token, m.sliding_window) == (8, 2, 4096)
+    z = get_config("zamba2-1.2b")
+    assert z.ssm_state == 64 and z.block_pattern == "zamba"
+    x = get_config("xlstm-350m")
+    assert (x.n_layers, x.d_model, x.n_heads) == (24, 1024, 4)
+    s = get_config("seamless-m4t-medium")
+    assert s.n_encoder_layers == 12 and s.vocab_size == 256206
+    i = get_config("internvl2-76b")
+    assert (i.n_layers, i.d_model, i.d_ff) == (80, 8192, 28672)

@@ -1,0 +1,124 @@
+"""MoE implementations vs the dense oracle + attention path equivalences
+(single-device mesh: shard_map/GSPMD code paths run with axis size 1; the
+true multi-device parity checks live in test_multidevice.py)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, smoke
+from repro.models.attention import (
+    chunked_gqa_attend,
+    gqa_attend,
+    causal_mask,
+)
+from repro.models.layers import apply_rope
+from repro.models.moe import moe_dense, moe_esp, moe_init, route
+from repro.parallel.collectives import bucket_combine, bucket_dispatch
+from repro.parallel.ctx import NO_MESH, ParallelCtx
+
+
+@pytest.fixture(scope="module")
+def moe_cfg():
+    return dataclasses.replace(
+        smoke(get_config("dbrx-132b")), n_experts=4, experts_per_token=2
+    )
+
+
+def test_esp_matches_dense_no_mesh(moe_cfg):
+    rng = jax.random.PRNGKey(0)
+    p = moe_init(rng, moe_cfg)
+    x = jax.random.normal(rng, (2, 8, moe_cfg.d_model)) * 0.5
+    ctx = ParallelCtx(capacity_factor=8.0)
+    ref, _ = moe_dense(p, x, moe_cfg, ctx)
+    out, _ = moe_esp(p, x, moe_cfg, ctx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_capacity_drop_is_graceful(moe_cfg):
+    """With capacity factor << 1, outputs shrink toward zero but stay finite
+    (dropped copies contribute nothing)."""
+    rng = jax.random.PRNGKey(0)
+    p = moe_init(rng, moe_cfg)
+    x = jax.random.normal(rng, (2, 32, moe_cfg.d_model))
+    out, _ = moe_esp(p, x, moe_cfg, ParallelCtx(capacity_factor=0.25))
+    full, _ = moe_esp(p, x, moe_cfg, ParallelCtx(capacity_factor=8.0))
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.linalg.norm(np.asarray(out)) < np.linalg.norm(np.asarray(full))
+
+
+def test_router_normalized(moe_cfg):
+    rng = jax.random.PRNGKey(1)
+    p = moe_init(rng, moe_cfg)
+    x = jax.random.normal(rng, (3, 5, moe_cfg.d_model))
+    ids, w, aux = route(p, x, moe_cfg)
+    assert ids.shape == (3, 5, 2) and w.shape == (3, 5, 2)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert float(aux) >= 1.0 - 1e-5  # aux loss lower bound at perfect balance
+
+
+@given(
+    n=st.integers(1, 40),
+    k=st.integers(1, 4),
+    buckets=st.integers(2, 8),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=25, deadline=None)
+def test_bucket_dispatch_roundtrip(n, k, buckets, seed):
+    """Property: with ample capacity, dispatch+combine with unit weights
+    reproduces k * x for every token (each copy returns its token)."""
+    rng = jax.random.PRNGKey(seed)
+    x = jax.random.normal(rng, (n, 4))
+    ids = jax.random.randint(rng, (n, k), 0, buckets)
+    cap = n * k  # no drops possible
+    bufs, slots, keep = bucket_dispatch(x, ids, buckets, cap)
+    assert bool(keep.all())
+    out = bucket_combine(bufs, ids, slots, keep, jnp.ones((n, k)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) * k, rtol=1e-5, atol=1e-6)
+
+
+def test_chunked_attention_matches_dense():
+    rng = jax.random.PRNGKey(0)
+    b, s, h, kv, hd = 2, 256, 8, 4, 32
+    q = jax.random.normal(rng, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (b, s, kv, hd))
+    for window in (0, 64):
+        ref = gqa_attend(q, k, v, causal_mask(s, window=window))
+        out = chunked_gqa_attend(q, k, v, True, window, chunk=64)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5
+        )
+
+
+def test_chunked_attention_grad_matches():
+    rng = jax.random.PRNGKey(0)
+    b, s, h, kv, hd = 1, 128, 4, 2, 16
+    q = jax.random.normal(rng, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (b, s, kv, hd))
+    f_ref = lambda q: gqa_attend(q, k, v, causal_mask(s)).sum()
+    f_chk = lambda q: chunked_gqa_attend(q, k, v, True, 0, chunk=32).sum()
+    g_ref = jax.grad(f_ref)(q)
+    g_chk = jax.grad(f_chk)(q)
+    np.testing.assert_allclose(np.asarray(g_chk), np.asarray(g_ref), rtol=1e-4, atol=1e-4)
+
+
+@given(shift=st.integers(0, 64), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_rope_relative_property(shift, seed):
+    """RoPE property: q.k dot products depend only on relative distance."""
+    rng = jax.random.PRNGKey(seed)
+    q = jax.random.normal(rng, (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, 1, 1, 32))
+    p0 = jnp.array([[5]])
+    p1 = jnp.array([[9]])
+    d1 = jnp.sum(apply_rope(q, p0, 1e4) * apply_rope(k, p1, 1e4))
+    d2 = jnp.sum(
+        apply_rope(q, p0 + shift, 1e4) * apply_rope(k, p1 + shift, 1e4)
+    )
+    np.testing.assert_allclose(float(d1), float(d2), rtol=1e-4, atol=1e-4)

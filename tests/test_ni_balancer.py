@@ -1,0 +1,101 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.er_mapping import er_mapping
+from repro.core.ni_balancer import (
+    BalancerState,
+    greedy_balance,
+    imbalance_degree,
+    should_trigger,
+    topology_aware_balance,
+)
+from repro.core.topology import MeshTopology
+
+
+def _dist_ring(a, b):
+    return abs(a - b)
+
+
+def _skewed_state(n_experts=16, n_devices=8, slots=3, seed=0):
+    state = BalancerState.initial(n_experts, n_devices, slots)
+    rng = np.random.default_rng(seed)
+    loads = rng.dirichlet(np.full(n_experts, 0.3))
+    state.load_ema = loads
+    return state
+
+
+def test_algorithm1_reduces_peak_heat():
+    state = _skewed_state()
+    before = state.heats().max()
+    migs = topology_aware_balance(state, _dist_ring)
+    assert migs
+    for m in migs:
+        state.apply(m)
+    assert state.heats().max() < before
+
+
+def test_algorithm1_respects_slots():
+    state = _skewed_state(slots=2)
+    migs = topology_aware_balance(state, _dist_ring)
+    for m in migs:
+        state.apply(m)
+    assert state.slots_used().max() <= 2
+
+
+def test_topology_aware_shorter_moves_than_greedy():
+    """Algorithm 1's destination choice minimizes hop distance; EPLB-greedy
+    ignores it. Average migration distance must not be larger."""
+    topo = MeshTopology(4, 4)
+    m = er_mapping(topo, 4, 4)
+    dist = lambda a, b: topo.hops(topo.coord(a), topo.coord(b))
+    s1, s2 = _skewed_state(32, 16, 3, seed=1), _skewed_state(32, 16, 3, seed=1)
+    topo_migs = topology_aware_balance(s1, dist)
+    greedy_migs = greedy_balance(s2)
+    d_topo = np.mean([dist(a, b) for _, a, b in topo_migs]) if topo_migs else 0
+    d_greedy = np.mean([dist(a, b) for _, a, b in greedy_migs]) if greedy_migs else 0
+    assert d_topo <= d_greedy + 1e-9
+
+
+def test_dead_device_evacuated():
+    from repro.core.ni_balancer import evacuate
+
+    state = _skewed_state(8, 4, 4)
+    migs = evacuate(state, 1, _dist_ring)
+    assert migs  # experts 1 and 5 lived only on device 1
+    # every expert homed on the dead device now has a live replica
+    for e in range(state.n_experts):
+        homes = state.replicas[e]
+        if 1 in homes:
+            assert any(d != 1 for d in homes)
+    # load balancing still operates on the survivor set
+    more = topology_aware_balance(state, _dist_ring)
+    for m in more:
+        assert m[2] != 1  # never migrate TO the dead device
+
+
+def test_eq2_trigger():
+    loads = [np.array([10.0, 1.0, 1.0, 1.0])]
+    assert imbalance_degree(loads) == pytest.approx((10 - 3.25) / 3.25)
+    assert should_trigger(loads, alpha=1.0, dt_since_migration=5, beta=0)
+    assert not should_trigger(loads, alpha=5.0, dt_since_migration=5, beta=0)
+    assert not should_trigger(loads, alpha=1.0, dt_since_migration=0.5, beta=1)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_balance_never_increases_peak(seed):
+    state = _skewed_state(12, 6, 3, seed=seed)
+    before = state.heats().max()
+    migs = topology_aware_balance(state, _dist_ring)
+    for m in migs:
+        state.apply(m)
+    assert state.heats().max() <= before + 1e-12
+
+
+def test_observe_ema():
+    state = BalancerState.initial(4, 2, 3)
+    state.observe(np.array([100.0, 0, 0, 0]))
+    state.observe(np.array([100.0, 0, 0, 0]))
+    assert state.load_ema[0] > 0.5
+    assert state.load_ema.sum() == pytest.approx(1.0)

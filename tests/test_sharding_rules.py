@@ -1,0 +1,92 @@
+"""Sharding policy tests (pure: eval_shape only, no device math)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.parallel.ctx import ParallelCtx
+from repro.parallel.sharding import cache_specs, param_spec, params_specs
+
+
+class _FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+CTX = ParallelCtx(mesh=None)  # only n_model matters through param_spec
+
+
+def test_core_param_rules():
+    cfg = get_config("qwen2-72b")
+    assert param_spec("embed", (152064, 8192), cfg, 16) == P("model", None)
+    assert param_spec("lm_head", (8192, 152064), cfg, 16) == P(None, "model")
+    assert param_spec("layers/attn/wq", (80, 8192, 8192), cfg, 16) == P(
+        None, None, "model"
+    )
+    assert param_spec("layers/attn/wo", (80, 8192, 8192), cfg, 16) == P(
+        None, "model", None
+    )
+    # non-divisible dims degrade to replication, never error
+    assert param_spec("layers/attn/wk", (80, 8192, 1000), cfg, 16) == P(
+        None, None, None
+    )
+
+
+def test_moe_param_rules():
+    dbrx = get_config("dbrx-132b")
+    # EP regime: slot rows sharded (16 % 16 == 0)
+    assert param_spec("layers/moe/w_gate", (40, 16, 6144, 10752), dbrx, 16) == P(
+        None, "model", None, None
+    )
+    mix = get_config("mixtral-8x22b")
+    # ESP regime: hidden dim sharded (8 experts don't divide 16)
+    assert param_spec("layers/moe/w_gate", (56, 8, 6144, 16384), mix, 16) == P(
+        None, None, None, "model"
+    )
+    assert param_spec("layers/moe/w_down", (56, 8, 16384, 6144), mix, 16) == P(
+        None, None, "model", None
+    )
+    assert param_spec("layers/moe/router", (56, 6144, 8), mix, 16) == P(
+        None, None, None
+    )
+
+
+def test_xlstm_stays_replicated():
+    cfg = get_config("xlstm-350m")
+    assert param_spec("units/m/w_qkv", (6, 3, 1024, 3072), cfg, 16) == P(
+        None, None, None, None
+    )
+
+
+def test_full_tree_specs_match_structure():
+    """Every param leaf gets a spec of matching rank, for every arch."""
+    from repro.configs import ARCHS, smoke
+
+    ctx = ParallelCtx()
+    object.__setattr__(ctx, "mesh", None)
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(
+            lambda k: T.init_params(k, cfg, jnp.bfloat16), jax.random.PRNGKey(0)
+        )
+        specs = params_specs(cfg, shapes, ctx)
+        flat_s = jax.tree.leaves(shapes)
+        flat_p = jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        assert len(flat_s) == len(flat_p)
+        for sh, sp in zip(flat_s, flat_p):
+            assert len(sp) == len(sh.shape), (arch, sh.shape, sp)
+
+
+def test_cache_specs_match_structure():
+    ctx = ParallelCtx()
+    for arch in ("llama3.2-1b", "zamba2-1.2b", "xlstm-350m", "seamless-m4t-medium"):
+        cfg = get_config(arch)
+        cache = jax.eval_shape(lambda: T.init_cache(cfg, 8, 64, jnp.bfloat16))
+        specs = cache_specs(cfg, cache, ctx, batch=8)
+        flat_c = jax.tree.leaves(cache)
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_c) == len(flat_s), arch

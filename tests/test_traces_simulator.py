@@ -1,0 +1,97 @@
+import numpy as np
+import pytest
+
+from repro.core.er_mapping import baseline_mapping, er_mapping
+from repro.core.hardware import DGX, NVL72, WSC
+from repro.core.simulator import (
+    ClusterSystem,
+    WSCSystem,
+    run_serving_trace,
+    simulate_iteration,
+)
+from repro.core.topology import MeshTopology
+from repro.core.traces import (
+    device_load_ratios,
+    mixed_scenario_trace,
+    single_scenario_trace,
+)
+from repro.core.workloads import DEEPSEEK_V3, PAPER_MODELS, QWEN3_235B
+
+
+def test_traces_deterministic():
+    a = single_scenario_trace(64, 2048, 50, seed=3)
+    b = single_scenario_trace(64, 2048, 50, seed=3)
+    assert np.array_equal(a.loads, b.loads)
+    assert not np.array_equal(
+        a.loads, single_scenario_trace(64, 2048, 50, seed=4).loads
+    )
+
+
+def test_single_scenario_ratios_stabilize():
+    """Paper Fig. 12: fixed scenario -> device load ratios stable after
+    warm-up (and meaningfully imbalanced)."""
+    tr = single_scenario_trace(256, 8192, 200, scenario="math")
+    ratios = device_load_ratios(tr.loads, 8)
+    late = ratios[100:]
+    assert late.max() > 1.5                      # imbalance persists
+    assert np.abs(late.std(axis=0)).max() < 0.2  # ...but stably so
+
+
+def test_mixed_scenario_drifts():
+    tr = mixed_scenario_trace(256, 8192, 400, period=200)
+    ratios = device_load_ratios(tr.loads, 8)
+    drift = np.abs(ratios[350:].mean(axis=0) - ratios[:50].mean(axis=0)).max()
+    assert drift > 0.1
+
+
+def test_er_mapping_reduces_communication():
+    """Fig. 13(b): ER-Mapping cuts total comm latency for a2a-heavy models."""
+    topo = MeshTopology(6, 6)
+    for model in (DEEPSEEK_V3, QWEN3_235B):
+        base = simulate_iteration(
+            model, WSCSystem(WSC, baseline_mapping(topo, 6, 6)), 256, 6
+        )
+        er = simulate_iteration(
+            model, WSCSystem(WSC, er_mapping(topo, 6, 6)), 256, 6
+        )
+        assert er.alltoall < base.alltoall
+        comm_base = base.alltoall + base.allreduce
+        comm_er = er.alltoall + er.allreduce
+        assert comm_er < comm_base
+
+
+def test_wsc_beats_dgx_communication():
+    """Fig. 13(a)/(b): WSC mesh >> DGX cluster on communication."""
+    topo = MeshTopology(6, 6)
+    wsc = simulate_iteration(
+        QWEN3_235B, WSCSystem(WSC, er_mapping(topo, 6, 6)), 256, 6
+    )
+    dgx = simulate_iteration(QWEN3_235B, ClusterSystem(DGX, 32, tp=8), 256, 8)
+    assert wsc.alltoall + wsc.allreduce < dgx.alltoall + dgx.allreduce
+
+
+def test_serving_trace_balancer_ordering():
+    """Fig. 16: exposed overhead greedy >= topo-aware > non-invasive == 0."""
+    topo = MeshTopology(4, 4)
+    sys_ = WSCSystem(WSC, er_mapping(topo, 4, 4))
+    trace = mixed_scenario_trace(64, 2048, 60, period=30, seed=1)
+    res = {
+        b: run_serving_trace(
+            DEEPSEEK_V3, sys_, trace, 256, 4, balancer=b, alpha=1.0
+        )
+        for b in ("none", "greedy", "topo", "topo_ni")
+    }
+    assert res["topo_ni"].exposed_overhead == 0.0
+    assert res["greedy"].exposed_overhead >= res["topo"].exposed_overhead
+    assert res["topo"].exposed_overhead > 0.0
+    # balancing reduces the load imbalance vs none
+    assert res["topo_ni"].peak_over_mean[-10:].mean() < res[
+        "none"
+    ].peak_over_mean[-10:].mean()
+
+
+def test_paper_models_table():
+    assert set(PAPER_MODELS) == {
+        "DeepSeek-V3", "Qwen3-235B", "DeepSeek-V2", "DBRX", "Mixtral-8x22B"
+    }
+    assert DEEPSEEK_V3.n_experts == 256 and DEEPSEEK_V3.topk == 8

@@ -1,0 +1,192 @@
+"""Kernel-path benchmark: einsum vs padded-GMM vs ragged-GMM expert FFN.
+
+Measures, per shape cell, the full grouped SwiGLU FFN (three matmuls):
+
+* ``einsum``      — the pre-kernel reference path (XLA-compiled einsums over
+  the padded ``(G, C, D)`` buckets);
+* ``gmm_padded``  — the Pallas grouped-matmul kernels over the same padded
+  buckets (``gmm_dual_act`` + ``gmm``);
+* ``gmm_ragged``  — the count-aware kernels (``gmm_dual_act_ragged`` +
+  ``gmm_ragged``): row-tiles past each group's token count skip the MXU.
+
+Besides wall-clock, each row reports the FLOP accounting that motivates the
+ragged kernel: ``padded_gflop`` is what a capacity-padded pass must execute
+(``6*G*C*D*F``), ``achieved_gflop`` is the useful work at the measured
+routing skew (``6*sum(counts)*D*F``), and ``ragged_exec_gflop`` is what the
+ragged kernel actually runs (tile granularity: ``6*sum(ceil(c/bm)*bm)*D*F``).
+``utilization`` = achieved/executed — 1.0 for ragged up to tile rounding,
+``sum(counts)/(G*C)`` for the padded paths.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/bench_kernels.py [--out BENCH_kernels.json]
+
+On CPU the Pallas paths execute in interpret mode (kernel *semantics*, not
+kernel speed) — wall-clock comparisons are only meaningful on TPU, and the
+JSON records backend + interpret so numbers aren't misread. The FLOP
+accounting is backend-independent.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import platform
+import time
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gmm.gmm import gmm, gmm_dual_act
+from repro.kernels.gmm.ops import expert_ffn_ragged
+from repro.kernels.gmm.ref import expert_ffn_ref
+from repro.kernels.registry import default_interpret
+
+# (name, G, C, D, F) — G buckets of capacity C, d_model D, expert hidden F.
+# Mirrors smoke-to-midsize EP cells (slots x capacity after dispatch).
+SHAPES = [
+    ("smoke_4x64", 4, 64, 64, 128),
+    ("ep_8x128", 8, 128, 128, 256),
+    ("ep_16x128", 16, 128, 128, 512),
+    ("skewed_32x64", 32, 64, 128, 256),
+]
+
+BM = 128  # row-tile the ragged kernel masks at (see kernels/gmm/ragged.py)
+
+
+def _skewed_counts(g: int, c: int, seed: int) -> np.ndarray:
+    """Zipf-ish routing skew: a few hot experts near capacity, a long tail
+    (incl. empties) — the fig. 6 imbalance regime."""
+    rng = np.random.default_rng(seed)
+    raw = rng.zipf(1.5, size=g).astype(np.float64)
+    counts = np.floor(c * raw / raw.max()).astype(np.int64)
+    counts[rng.permutation(g)[: max(g // 8, 1)]] = 0  # idle slots
+    return np.clip(counts, 0, c)
+
+
+def _time(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(iters: int = 20) -> list[dict]:
+    interpret = default_interpret()
+    dtype = jnp.float32
+    rows = []
+    for name, g, c, d, f in SHAPES:
+        ks = jax.random.split(jax.random.PRNGKey(zlib.crc32(name.encode())), 4)
+        x = jax.random.normal(ks[0], (g, c, d), dtype)
+        wg = jax.random.normal(ks[1], (g, d, f), dtype) * 0.1
+        wu = jax.random.normal(ks[2], (g, d, f), dtype) * 0.1
+        wd = jax.random.normal(ks[3], (g, f, d), dtype) * 0.1
+        counts = _skewed_counts(g, c, seed=g * c)
+        gs = jnp.asarray(counts, jnp.int32)
+        # Zero rows past each count, as bucket_dispatch produces them.
+        x = x * (jnp.arange(c)[None, :, None] < gs[:, None, None])
+
+        einsum_fn = jax.jit(expert_ffn_ref)
+
+        @jax.jit
+        def padded_fn(x, wg, wu, wd):
+            h = gmm_dual_act(x, wg, wu, interpret=interpret)
+            return gmm(h, wd, interpret=interpret)
+
+        ragged_fn = jax.jit(
+            lambda x, wg, wu, wd, gs: expert_ffn_ragged(
+                x, wg, wu, wd, gs, interpret=interpret
+            )
+        )
+
+        # Cross-check before timing.
+        ref = np.asarray(einsum_fn(x, wg, wu, wd))
+        np.testing.assert_allclose(
+            np.asarray(ragged_fn(x, wg, wu, wd, gs)), ref, rtol=2e-4, atol=2e-4
+        )
+
+        flop_per_row = 6 * d * f  # 3 matmuls, 2 flop/MAC
+        padded_gf = g * c * flop_per_row / 1e9
+        achieved_gf = int(counts.sum()) * flop_per_row / 1e9
+        bm = min(BM, c)
+        ragged_rows = sum(math.ceil(cnt / bm) * bm for cnt in counts)
+        ragged_exec_gf = ragged_rows * flop_per_row / 1e9
+
+        t_e = _time(einsum_fn, x, wg, wu, wd, iters=iters)
+        t_p = _time(padded_fn, x, wg, wu, wd, iters=iters)
+        t_r = _time(ragged_fn, x, wg, wu, wd, gs, iters=iters)
+
+        rows.append(
+            {
+                "shape": name,
+                "G": g,
+                "C": c,
+                "D": d,
+                "F": f,
+                "tokens_routed": int(counts.sum()),
+                "tokens_padded": g * c,
+                "group_sizes": counts.tolist(),
+                "padded_gflop": round(padded_gf, 4),
+                "achieved_gflop": round(achieved_gf, 4),
+                "paths": {
+                    "einsum": {
+                        "wall_ms": round(t_e * 1e3, 3),
+                        "exec_gflop": round(padded_gf, 4),
+                        "utilization": round(achieved_gf / padded_gf, 4),
+                    },
+                    "gmm_padded": {
+                        "wall_ms": round(t_p * 1e3, 3),
+                        "exec_gflop": round(padded_gf, 4),
+                        "utilization": round(achieved_gf / padded_gf, 4),
+                    },
+                    "gmm_ragged": {
+                        "wall_ms": round(t_r * 1e3, 3),
+                        "exec_gflop": round(ragged_exec_gf, 4),
+                        "utilization": round(
+                            achieved_gf / ragged_exec_gf, 4
+                        ) if ragged_exec_gf else 1.0,
+                        "flop_vs_padded": round(
+                            ragged_exec_gf / padded_gf, 4
+                        ),
+                    },
+                },
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--iters", type=int, default=20)
+    args = ap.parse_args()
+
+    rows = run(iters=args.iters)
+    doc = {
+        "bench": "kernels_expert_ffn",
+        "backend": jax.default_backend(),
+        "interpret": default_interpret(),
+        "jax": jax.__version__,
+        "host": platform.machine(),
+        "note": (
+            "wall_ms on non-TPU backends runs the Pallas paths in interpret "
+            "mode (semantics, not speed); FLOP accounting is backend-"
+            "independent. utilization = achieved/executed FLOPs."
+        ),
+        "shapes": rows,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
+    print(json.dumps(doc, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -22,10 +22,9 @@ from repro.runtime.serve import ServeConfig, Server
 
 n_dev = len(jax.devices())
 if n_dev >= 8:
-    mesh = jax.make_mesh(
-        (n_dev // 4, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((n_dev // 4, 4), ("data", "model"))
     ctx = ParallelCtx(mesh=mesh, capacity_factor=4.0)
     topo = MeshTopology(2, 2)
     dist = lambda a, b: topo.hops(topo.coord(a), topo.coord(b))

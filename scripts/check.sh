@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# One-command gate: tier-1 tests + a fast interpret-mode kernel smoke.
+#
+#   ./scripts/check.sh          # full gate
+#   ./scripts/check.sh -k gmm   # extra args forwarded to the tier-1 pytest
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q "$@"
+
+echo "== kernel smoke (interpret mode) =="
+python - <<'EOF'
+import jax, jax.numpy as jnp, numpy as np
+from repro.kernels.gmm.ops import expert_ffn_ragged
+from repro.kernels.gmm.ref import expert_ffn_ragged_ref
+from repro.kernels.registry import attend, decode_attend
+from repro.models.attention import causal_mask, gqa_attend
+
+rng = jax.random.PRNGKey(0)
+ks = jax.random.split(rng, 4)
+x = jax.random.normal(ks[0], (4, 16, 8))
+wg = jax.random.normal(ks[1], (4, 8, 12)) * 0.1
+wu = jax.random.normal(ks[2], (4, 8, 12)) * 0.1
+wd = jax.random.normal(ks[3], (4, 12, 8)) * 0.1
+gs = jnp.asarray([0, 5, 16, 3], jnp.int32)
+np.testing.assert_allclose(
+    np.asarray(expert_ffn_ragged(x, wg, wu, wd, gs)),
+    np.asarray(expert_ffn_ragged_ref(x, wg, wu, wd, gs)),
+    rtol=1e-5, atol=1e-5)
+
+q = jax.random.normal(ks[0], (1, 32, 4, 16))
+k = jax.random.normal(ks[1], (1, 32, 2, 16))
+v = jax.random.normal(ks[2], (1, 32, 2, 16))
+np.testing.assert_allclose(
+    np.asarray(attend(q, k, v, causal=True)),
+    np.asarray(gqa_attend(q, k, v, causal_mask(32))),
+    rtol=2e-5, atol=2e-5)
+
+valid = (jnp.arange(32)[None, :] < 20).astype(jnp.int32)
+out = decode_attend(q[:, 0], k, v, valid)
+assert np.isfinite(np.asarray(out)).all()
+print("kernel smoke OK")
+EOF
+
+echo "ALL CHECKS PASSED"

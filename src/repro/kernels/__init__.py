@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernels for the paper's compute hot spots (grouped expert FFN,
+# flash attention, flash decode) + the dispatch layer in ``registry.py``.
+# Model code routes through ``repro.kernels.registry``; see README.md for
+# flags, fallback rules and VMEM budgets.

@@ -13,6 +13,7 @@ import functools
 import jax
 
 from repro.kernels.gmm.gmm import gmm, gmm_dual_act
+from repro.kernels.gmm.ragged import gmm_dual_act_ragged, gmm_ragged
 
 
 def _default_interpret() -> bool:
@@ -31,3 +32,44 @@ def expert_ffn(x, wg, wu, wd, interpret: bool | None = None):
     interpret = _default_interpret() if interpret is None else interpret
     h = gmm_dual_act(x, wg, wu, interpret=interpret)
     return gmm(h, wd, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("groups_per_weight", "interpret"))
+def gmm_ragged_op(
+    x,
+    w,
+    group_sizes,
+    groups_per_weight: int = 1,
+    interpret: bool | None = None,
+):
+    interpret = _default_interpret() if interpret is None else interpret
+    return gmm_ragged(
+        x,
+        w,
+        group_sizes,
+        groups_per_weight=groups_per_weight,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("groups_per_weight", "interpret"))
+def expert_ffn_ragged(
+    x,
+    wg,
+    wu,
+    wd,
+    group_sizes,
+    groups_per_weight: int = 1,
+    interpret: bool | None = None,
+):
+    """Count-aware fused SwiGLU expert FFN: FLOPs track ``sum(group_sizes)``
+    instead of ``G * capacity``; rows past each group's count come out zero."""
+    interpret = _default_interpret() if interpret is None else interpret
+    h = gmm_dual_act_ragged(
+        x, wg, wu, group_sizes,
+        groups_per_weight=groups_per_weight, interpret=interpret,
+    )
+    return gmm_ragged(
+        h, wd, group_sizes,
+        groups_per_weight=groups_per_weight, interpret=interpret,
+    )

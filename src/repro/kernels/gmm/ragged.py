@@ -1,0 +1,170 @@
+"""Count-aware (ragged) grouped matmul Pallas kernels.
+
+Megablocks-style refinement of ``gmm``/``gmm_dual_act``: the per-group token
+counts (``group_sizes``, int32 ``(G,)``) ride in as a scalar-prefetch operand
+(SMEM), and each row-tile checks ``mi * bm < count`` before touching the MXU.
+Row-tiles entirely past a group's count skip both matmuls; partially-filled
+tiles mask their tail rows to zero on the final K step. MXU FLOPs therefore
+scale with ``sum(ceil(count / bm) * bm)`` ≈ tokens actually routed, not
+``G * capacity`` — on the skewed routing distributions the paper targets
+(fig. 6) that's the bulk of the padded EP FFN cost.
+
+``groups_per_weight`` (gpw) lets ``gpw`` consecutive x-groups share one
+weight row — the layout both MoE paths produce after flattening:
+
+* EP after the all_to_all: ``(slots_per_device, ep, cap, d)`` flattens to
+  ``G = slots_per_device * ep`` groups, weight row ``gi // ep``;
+* ESP local buckets: ``(E, n_batch_groups, cap, d)`` flattens to
+  ``G = E * n_groups`` groups, weight row ``gi // n_groups``.
+
+VMEM per step matches the padded kernels (the scalar counts live in SMEM);
+the grid is identical, so the only cost of raggedness is the SMEM read and
+the per-tile predicate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.gmm.gmm import _tile
+
+
+def _ragged_kernel(gs_ref, x_ref, w_ref, o_ref, acc_ref, *, nk: int, bm: int):
+    gi = pl.program_id(0)
+    mi = pl.program_id(1)
+    k = pl.program_id(3)
+    count = gs_ref[gi]
+    live = mi * bm < count
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(live)
+    def _():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[0],
+            w_ref[0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == nk - 1)
+    def _():
+        rows = mi * bm + jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 0)
+        o_ref[0, ...] = jnp.where(rows < count, acc_ref[...], 0.0).astype(
+            o_ref.dtype
+        )
+
+
+def gmm_ragged(
+    x: jax.Array,            # (G, C, D)
+    w: jax.Array,            # (G // gpw, D, F)
+    group_sizes: jax.Array,  # (G,) int32 — valid leading rows per group
+    *,
+    groups_per_weight: int = 1,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """y[g, :count_g] = x[g, :count_g] @ w[g // gpw]; tail rows are zero."""
+    g, c, d = x.shape
+    f = w.shape[-1]
+    gpw = groups_per_weight
+    assert g == w.shape[0] * gpw, (g, w.shape, gpw)
+    bm, bn, bk = _tile(c, bm), _tile(f, bn), _tile(d, bk)
+    nk = d // bk
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g, c // bm, f // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda gi, i, j, k, gs: (gi, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda gi, i, j, k, gs: (gi // gpw, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gi, i, j, k, gs: (gi, i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_kernel, nk=nk, bm=bm),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((g, c, f), x.dtype),
+        interpret=interpret,
+    )(group_sizes.astype(jnp.int32), x, w)
+
+
+def _ragged_dual_kernel(
+    gs_ref, x_ref, wg_ref, wu_ref, o_ref, accg_ref, accu_ref, *, nk: int, bm: int
+):
+    gi = pl.program_id(0)
+    mi = pl.program_id(1)
+    k = pl.program_id(3)
+    count = gs_ref[gi]
+    live = mi * bm < count
+
+    @pl.when(k == 0)
+    def _():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    @pl.when(live)
+    def _():
+        dims = (((1,), (0,)), ((), ()))
+        accg_ref[...] += jax.lax.dot_general(
+            x_ref[0], wg_ref[0], dims, preferred_element_type=jnp.float32
+        )
+        accu_ref[...] += jax.lax.dot_general(
+            x_ref[0], wu_ref[0], dims, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == nk - 1)
+    def _():
+        rows = mi * bm + jax.lax.broadcasted_iota(jnp.int32, accg_ref.shape, 0)
+        h = jax.nn.silu(accg_ref[...]) * accu_ref[...]
+        o_ref[0, ...] = jnp.where(rows < count, h, 0.0).astype(o_ref.dtype)
+
+
+def gmm_dual_act_ragged(
+    x: jax.Array,
+    wg: jax.Array,
+    wu: jax.Array,
+    group_sizes: jax.Array,
+    *,
+    groups_per_weight: int = 1,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """h[g] = silu(x@wg) * (x@wu) on the first count_g rows; tail is zero."""
+    g, c, d = x.shape
+    f = wg.shape[-1]
+    gpw = groups_per_weight
+    assert g == wg.shape[0] * gpw, (g, wg.shape, gpw)
+    bm, bn, bk = _tile(c, bm), _tile(f, bn), _tile(d, bk)
+    nk = d // bk
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g, c // bm, f // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda gi, i, j, k, gs: (gi, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda gi, i, j, k, gs: (gi // gpw, k, j)),
+            pl.BlockSpec((1, bk, bn), lambda gi, i, j, k, gs: (gi // gpw, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gi, i, j, k, gs: (gi, i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_dual_kernel, nk=nk, bm=bm),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((g, c, f), x.dtype),
+        interpret=interpret,
+    )(group_sizes.astype(jnp.int32), x, wg, wu)

@@ -18,3 +18,46 @@ def expert_ffn_ref(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array):
     """
     h = jax.nn.silu(gmm_ref(x, wg)) * gmm_ref(x, wu)
     return gmm_ref(h, wd)
+
+
+def _row_mask(c: int, group_sizes: jax.Array) -> jax.Array:
+    return (jnp.arange(c)[None, :] < group_sizes[:, None])[..., None]
+
+
+def _grouped(x: jax.Array, groups_per_weight: int) -> jax.Array:
+    """(G, C, D) -> (G/gpw, gpw*C, D): fold weight-sharing groups together
+    so the reference einsum never materializes repeated weights."""
+    g, c, d = x.shape
+    return x.reshape(g // groups_per_weight, groups_per_weight * c, d)
+
+
+def gmm_ragged_ref(
+    x: jax.Array,
+    w: jax.Array,
+    group_sizes: jax.Array,
+    groups_per_weight: int = 1,
+) -> jax.Array:
+    """Oracle for ``gmm_ragged``: matmul then zero rows >= count."""
+    g, c, _ = x.shape
+    y = gmm_ref(_grouped(x, groups_per_weight), w).reshape(g, c, -1)
+    return y * _row_mask(c, group_sizes).astype(y.dtype)
+
+
+def expert_ffn_ragged_ref(
+    x: jax.Array,
+    wg: jax.Array,
+    wu: jax.Array,
+    wd: jax.Array,
+    group_sizes: jax.Array | None = None,
+    groups_per_weight: int = 1,
+):
+    """Oracle for the count-aware expert FFN (kernel semantics: rows past a
+    group's count are exactly zero). ``group_sizes=None`` -> dense ffn over
+    the folded groups (the padded path)."""
+    g, c, _ = x.shape
+    xg = _grouped(x, groups_per_weight)
+    h = jax.nn.silu(gmm_ref(xg, wg)) * gmm_ref(xg, wu)
+    y = gmm_ref(h, wd).reshape(g, c, -1)
+    if group_sizes is None:
+        return y
+    return y * _row_mask(c, group_sizes).astype(y.dtype)

@@ -1,0 +1,222 @@
+"""Kernel dispatch layer: route hot-path math to Pallas or reference code.
+
+One chokepoint decides, per call site, whether the Pallas kernels run and
+how (compiled on TPU, interpret mode elsewhere), so model code never
+hard-codes a backend:
+
+* ``kernels_enabled(flag)``   — resolve a ``ParallelCtx.use_kernels`` value
+  ("auto" -> TPU only) into a bool.
+* ``default_interpret()``     — True off-TPU: kernel bodies execute via the
+  Pallas interpreter so CPU tests cover the exact kernel code.
+* ``expert_ffn(...)``         — count-aware grouped SwiGLU FFN. Kernel path
+  = ``gmm_dual_act_ragged`` + ``gmm_ragged`` (FLOPs ~ sum(group_sizes));
+  fallback = folded einsums. Differentiable: the kernel forward pairs with
+  a reference-math backward via ``jax.custom_vjp``.
+* ``attend(...)`` / ``can_flash_attend(...)``   — causal/bidirectional GQA
+  flash attention with a chunked-reference backward.
+* ``decode_attend(...)`` / ``can_flash_decode(...)`` — single-token decode
+  against a (possibly partially valid) KV cache.
+
+Fallback rules: a caller first asks the ``can_*`` predicate (shapes must
+tile for the compiled path; interpret mode accepts anything), and keeps its
+einsum reference for the "no" answer. Compiled-path gates are conservative
+— last dims multiples of 128, row dims multiples of 8 — matching the MXU
+native tiling the kernels were written for.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.flash_decode.ops import flash_decode_op
+from repro.kernels.gmm.ops import expert_ffn_ragged as _expert_ffn_ragged_op
+from repro.kernels.gmm.ref import expert_ffn_ragged_ref
+
+
+# ---------------------------------------------------------------------------
+# flag resolution
+# ---------------------------------------------------------------------------
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Off-TPU the kernels run under the Pallas interpreter."""
+    return not on_tpu()
+
+
+def kernels_enabled(flag: str | bool = "auto") -> bool:
+    """Resolve a ``use_kernels`` setting: "auto" means TPU-only (interpret
+    mode is correct everywhere but too slow to be a default on CPU)."""
+    if flag == "auto":
+        return on_tpu()
+    return bool(flag)
+
+
+def parse_use_kernels(value: str) -> str | bool:
+    """CLI tri-state ("auto"|"on"|"off") -> ``ParallelCtx.use_kernels``."""
+    return {"on": True, "off": False}.get(value, "auto")
+
+
+def _zero_ct(a):
+    """float0 cotangent for integer primal inputs (custom_vjp contract)."""
+    return np.zeros(a.shape, jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# grouped expert FFN (ragged / count-aware)
+# ---------------------------------------------------------------------------
+
+def can_gmm(c: int, d: int, f: int, interpret: bool) -> bool:
+    """Can the grouped-matmul kernels take (·, c, d) @ (·, d, f)?"""
+    if interpret:
+        return True
+    return c % 8 == 0 and d % 128 == 0 and f % 128 == 0
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _ffn_kernel(gpw: int, interpret: bool, x, wg, wu, wd, group_sizes):
+    return _expert_ffn_ragged_op(
+        x, wg, wu, wd, group_sizes,
+        groups_per_weight=gpw, interpret=interpret,
+    )
+
+
+def _ffn_fwd(gpw, interpret, x, wg, wu, wd, group_sizes):
+    y = _ffn_kernel(gpw, interpret, x, wg, wu, wd, group_sizes)
+    return y, (x, wg, wu, wd, group_sizes)
+
+
+def _ffn_bwd(gpw, interpret, res, ct):
+    # Backward through the reference math (the standard flash-style trick:
+    # kernel forward, recomputed reference backward — Pallas kernels with
+    # VMEM scratch have no autodiff rule).
+    x, wg, wu, wd, gs = res
+    _, vjp = jax.vjp(
+        lambda a, b, c, d: expert_ffn_ragged_ref(a, b, c, d, gs, gpw),
+        x, wg, wu, wd,
+    )
+    return (*vjp(ct), _zero_ct(gs))
+
+
+_ffn_kernel.defvjp(_ffn_fwd, _ffn_bwd)
+
+
+def expert_ffn(
+    x: jax.Array,                       # (G, C, D)
+    wg: jax.Array,                      # (G/gpw, D, F)
+    wu: jax.Array,                      # (G/gpw, D, F)
+    wd: jax.Array,                      # (G/gpw, F, D)
+    group_sizes: jax.Array | None = None,   # (G,) int32 valid-row counts
+    *,
+    groups_per_weight: int = 1,
+    enabled: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Grouped SwiGLU expert FFN with optional raggedness.
+
+    With ``group_sizes`` the kernel skips row-tiles past each group's count
+    (and zeroes the tail), so expert FLOPs track tokens actually routed.
+    ``groups_per_weight`` consecutive groups share one weight row (the
+    flattened EP/ESP bucket layouts). Falls back to folded einsums when
+    disabled or when shapes don't tile for the compiled kernel.
+    """
+    g, c, d = x.shape
+    f = wg.shape[-1]
+    interpret = default_interpret() if interpret is None else interpret
+    if enabled and can_gmm(c, d, f, interpret) and can_gmm(c, f, d, interpret):
+        gs = (
+            group_sizes.astype(jnp.int32)
+            if group_sizes is not None
+            else jnp.full((g,), c, jnp.int32)
+        )
+        return _ffn_kernel(groups_per_weight, interpret, x, wg, wu, wd, gs)
+    return expert_ffn_ragged_ref(
+        x, wg, wu, wd, group_sizes, groups_per_weight
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill / train)
+# ---------------------------------------------------------------------------
+
+def can_flash_attend(
+    s: int, t: int, nh: int, nkv: int, hd: int, interpret: bool
+) -> bool:
+    if nkv <= 0 or nh % nkv:
+        return False
+    if interpret:
+        return True
+    return hd % 128 == 0 and s % 8 == 0 and t % 128 == 0
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _attend_kernel(causal: bool, window: int, interpret: bool, q, k, v):
+    return flash_attention_op(
+        q, k, v, causal=causal, window=window, interpret=interpret
+    )
+
+
+def _attend_fwd(causal, window, interpret, q, k, v):
+    return _attend_kernel(causal, window, interpret, q, k, v), (q, k, v)
+
+
+def _attend_bwd(causal, window, interpret, res, ct):
+    from repro.models.attention import chunked_gqa_attend  # import cycle
+
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: chunked_gqa_attend(q_, k_, v_, causal, window),
+        q, k, v,
+    )
+    return vjp(ct)
+
+
+_attend_kernel.defvjp(_attend_fwd, _attend_bwd)
+
+
+def attend(
+    q: jax.Array,       # (B, S, H, hd)
+    k: jax.Array,       # (B, T, K, hd)
+    v: jax.Array,       # (B, T, K, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash GQA attention (queries cover the tail of the key range). The
+    caller is responsible for gating on ``can_flash_attend``."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _attend_kernel(causal, window, interpret, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# flash decode (one token vs the KV cache)
+# ---------------------------------------------------------------------------
+
+def can_flash_decode(
+    t: int, nh: int, nkv: int, hd: int, interpret: bool
+) -> bool:
+    if nkv <= 0 or nh % nkv:
+        return False
+    if interpret:
+        return True
+    return hd % 128 == 0 and t % 128 == 0
+
+
+def decode_attend(
+    q: jax.Array,        # (B, H, hd) — the single new token's queries
+    k: jax.Array,        # (B, T, K, hd)
+    v: jax.Array,        # (B, T, K, hd)
+    valid: jax.Array,    # (B, T) int32/bool cache-slot validity
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    return flash_decode_op(q, k, v, valid.astype(jnp.int32), interpret=interpret)

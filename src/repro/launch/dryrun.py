@@ -148,9 +148,11 @@ def make_ctx(mesh, multi_pod: bool, batch: int, probe: bool = False) -> Parallel
         # FLOPs and combine-psum bytes scale linearly with this.
         capacity_factor=1.25,
         # Probe mode: unrolled layer loops + dense attention so the cost
-        # analysis counts every FLOP (while bodies are visited once).
+        # analysis counts every FLOP (while bodies are visited once); Pallas
+        # custom calls are opaque to cost_analysis, so kernels stay off too.
         full_unroll=probe,
         force_dense_attn=probe,
+        use_kernels=False if probe else "auto",
         # §Perf iteration 5 (REFUTED): seq-parallel residual constraints do
         # not convert the TP all-reduces into reduce-scatters under this
         # GSPMD version and add a small all-gather — kept off.

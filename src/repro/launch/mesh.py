@@ -16,14 +16,26 @@ import jax
 import numpy as np
 
 
-def _axis_types(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _axis_type_kwargs(n: int) -> dict:
+    """``axis_types=(Auto, ...)`` on jax versions that have it, {} otherwise
+    (jax <= 0.4.x meshes are implicitly all-Auto)."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (at.Auto,) * n} if at is not None else {}
+
+
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where supported; the
+    portable spelling for every mesh this repo builds (launchers + tests)."""
+    try:
+        return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
+    except TypeError:  # old make_mesh without axis_types
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_axis_types(len(axes)))
+    return make_mesh_compat(shape, axes)
 
 
 def make_er_mesh(*, multi_pod: bool = False, mapping: str = "er"):
@@ -53,9 +65,12 @@ def make_er_mesh(*, multi_pod: bool = False, mapping: str = "er"):
         pods.append(pod_devs[order])
     arr = np.stack(pods) if multi_pod else pods[0]
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.sharding.Mesh(arr, axes, axis_types=_axis_types(len(axes)))
+    try:
+        return jax.sharding.Mesh(arr, axes, **_axis_type_kwargs(len(axes)))
+    except TypeError:  # old Mesh without axis_types
+        return jax.sharding.Mesh(arr, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 4):
     """Small mesh for CPU tests (requires forced host device count)."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_axis_types(2))
+    return make_mesh_compat((data, model), ("data", "model"))

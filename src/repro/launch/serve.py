@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke as smoke_cfg
+from repro.kernels.registry import parse_use_kernels
+from repro.launch.mesh import make_mesh_compat
 from repro.core.er_mapping import er_mapping
 from repro.core.topology import MeshTopology
 from repro.models import transformer as T
@@ -35,27 +37,30 @@ def main():
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--alpha", type=float, default=0.5)
+    ap.add_argument(
+        "--use-kernels", default="auto", choices=("auto", "on", "off"),
+        help="Pallas kernel dispatch: auto=TPU only, on=everywhere "
+        "(interpret off-TPU), off=einsum reference paths",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_cfg(cfg)
 
+    uk = parse_use_kernels(args.use_kernels)
     n_dev = len(jax.devices())
     if n_dev > 1:
         m = max(d for d in (2, 4, 8, 16) if n_dev % d == 0 and d <= n_dev)
-        mesh = jax.make_mesh(
-            (n_dev // m, m), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
-        ctx = ParallelCtx(mesh=mesh, capacity_factor=4.0)
+        mesh = make_mesh_compat((n_dev // m, m), ("data", "model"))
+        ctx = ParallelCtx(mesh=mesh, capacity_factor=4.0, use_kernels=uk)
         # ER-Mapping hop distance on a model-axis ring mesh (for Algorithm 1).
         rows = int(np.sqrt(m)) if int(np.sqrt(m)) ** 2 == m else 1
         topo = MeshTopology(rows, m // rows)
         dist = lambda a, b: topo.hops(topo.coord(a), topo.coord(b))
     else:
         mesh = None
-        ctx = ParallelCtx()
+        ctx = ParallelCtx(use_kernels=uk)
         dist = None
 
     params = T.init_params(jax.random.PRNGKey(0), cfg)

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, smoke as smoke_cfg
+from repro.kernels.registry import parse_use_kernels
+from repro.launch.mesh import make_mesh_compat
 from repro.parallel.ctx import ParallelCtx
 from repro.parallel.sharding import state_specs, to_shardings
 from repro.runtime.checkpoint import CheckpointManager
@@ -47,28 +49,32 @@ def main():
     ap.add_argument("--pod-sync", type=int, default=0)
     ap.add_argument("--mesh", default="auto", help="auto|DxM e.g. 2x4")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument(
+        "--use-kernels", default="auto", choices=("auto", "on", "off"),
+        help="Pallas kernel dispatch: auto=TPU only, on=everywhere "
+        "(interpret off-TPU), off=einsum reference paths",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_cfg(cfg)
 
+    uk = parse_use_kernels(args.use_kernels)
     n_dev = len(jax.devices())
     if args.mesh != "auto":
         d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        ctx = ParallelCtx(mesh=mesh)
+        mesh = make_mesh_compat((d, m), ("data", "model"))
+        ctx = ParallelCtx(mesh=mesh, use_kernels=uk)
     elif n_dev > 1:
         m = 1
         while n_dev % (m * 2) == 0 and m * 2 <= 8:
             m *= 2
-        mesh = jax.make_mesh((n_dev // m, m), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        ctx = ParallelCtx(mesh=mesh)
+        mesh = make_mesh_compat((n_dev // m, m), ("data", "model"))
+        ctx = ParallelCtx(mesh=mesh, use_kernels=uk)
     else:
         mesh = None
-        ctx = ParallelCtx()
+        ctx = ParallelCtx(use_kernels=uk)
 
     opt = AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps)
     state = init_state(jax.random.PRNGKey(0), cfg)

@@ -17,9 +17,12 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.kernels import registry
 from repro.models.layers import apply_rope, normal_init
+from repro.parallel.compat import shard_map
 from repro.parallel.ctx import ParallelCtx
 
 NEG_INF = -1e30
@@ -159,6 +162,82 @@ def causal_mask(s: int, t: int | None = None, window: int = 0, offset: int = 0):
 
 
 # ---------------------------------------------------------------------------
+# kernel dispatch (flash attention / flash decode via repro.kernels.registry)
+# ---------------------------------------------------------------------------
+
+def _flash_attend_eligible(q, k, ctx: ParallelCtx) -> bool:
+    if not ctx.kernels_on or ctx.force_dense_attn:
+        return False
+    b, s, nh, hd = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    if not registry.can_flash_attend(
+        s, t, nh, nkv, hd, registry.default_interpret()
+    ):
+        return False
+    if ctx.mesh is None:
+        return True
+    # Under GSPMD the pallas_call must go through shard_map; the sharded
+    # dims (batch, heads) have to divide their mesh axes.
+    return nh % ctx.n_model == 0 and nkv % ctx.n_model == 0 and b % ctx.n_batch == 0
+
+
+def _flash_attend(q, k, v, causal: bool, window: int, ctx: ParallelCtx):
+    if ctx.mesh is None:
+        return registry.attend(q, k, v, causal=causal, window=window)
+    spec = P(ctx.batch_spec, None, ctx.model_axis, None)
+    return shard_map(
+        lambda qb, kb, vb: registry.attend(
+            qb, kb, vb, causal=causal, window=window
+        ),
+        mesh=ctx.mesh,
+        in_specs=(spec, spec, spec),
+        out_specs=spec,
+        check_vma=False,
+    )(q, k, v)
+
+
+def _flash_decode_eligible(q, k_cache, ctx: ParallelCtx) -> bool:
+    if not ctx.kernels_on or ctx.force_dense_attn:
+        return False
+    b, _, nh, hd = q.shape
+    t, nkv = k_cache.shape[1], k_cache.shape[2]
+    if not registry.can_flash_decode(
+        t, nh, nkv, hd, registry.default_interpret()
+    ):
+        return False
+    if ctx.mesh is None:
+        return True
+    if ctx.seq_parallel_kv:
+        # Cache seq dim rides the model axis; the flash-decode kernel
+        # normalizes locally, so the cross-shard LSE merge stays with
+        # ``seq_parallel_decode_attend`` (kernelizing it = open item).
+        return False
+    return nh % ctx.n_model == 0 and nkv % ctx.n_model == 0 and b % ctx.n_batch == 0
+
+
+def _flash_decode(q, k_cache, v_cache, valid, ctx: ParallelCtx):
+    """q: (B, 1, H, hd); valid: (B, L) -> (B, 1, H, hd)."""
+    q1 = q[:, 0]
+    if ctx.mesh is None:
+        o = registry.decode_attend(q1, k_cache, v_cache, valid)
+        return o[:, None]
+    bspec, ax = ctx.batch_spec, ctx.model_axis
+    o = shard_map(
+        lambda qb, kb, vb, mb: registry.decode_attend(qb, kb, vb, mb),
+        mesh=ctx.mesh,
+        in_specs=(
+            P(bspec, ax, None),
+            P(bspec, None, ax, None),
+            P(bspec, None, ax, None),
+            P(bspec, None),
+        ),
+        out_specs=P(bspec, ax, None),
+        check_vma=False,
+    )(q1, k_cache, v_cache, valid)
+    return o[:, None]
+
+
+# ---------------------------------------------------------------------------
 # train / prefill
 # ---------------------------------------------------------------------------
 
@@ -178,7 +257,9 @@ def attention(
     if cfg.rope_theta > 0:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-    if s > CHUNKED_KV_THRESHOLD and not ctx.force_dense_attn:
+    if _flash_attend_eligible(q, k, ctx):
+        o = _flash_attend(q, k, v, causal, cfg.sliding_window if causal else 0, ctx)
+    elif s > CHUNKED_KV_THRESHOLD and not ctx.force_dense_attn:
         o = chunked_gqa_attend(q, k, v, causal, cfg.sliding_window)
     else:
         mask = causal_mask(s, window=cfg.sliding_window) if causal else None
@@ -275,7 +356,11 @@ def decode_attention(
         mask = slot_pos >= 0
     else:
         mask = j <= pos
-    o = gqa_attend(q, k_cache, v_cache, mask[None, None, None, None, :])
+    if _flash_decode_eligible(q, k_cache, ctx):
+        valid = jnp.broadcast_to(mask[None, :], (b, length))
+        o = _flash_decode(q, k_cache, v_cache, valid, ctx)
+    else:
+        o = gqa_attend(q, k_cache, v_cache, mask[None, None, None, None, :])
     o = ctx.shard(o, ctx.batch_spec, None, ctx.model_axis, None)
     out = out_proj(p, o, ctx)
     return out, {"k": k_cache, "v": v_cache}

@@ -25,6 +25,8 @@ from repro.parallel.collectives import (
     bucket_combine,
     bucket_dispatch,
     ep_moe_shardmap,
+    esp_expert_ffn,
+    kept_counts,
     uniform_placement,
 )
 from repro.parallel.ctx import ParallelCtx
@@ -111,10 +113,6 @@ def moe_esp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
     n_loc = (b // groups) * s
     cap = max(int(n_loc * k * ctx.capacity_factor / e), 8)
 
-    wg = ctx.shard(p["w_gate"], None, None, ctx.model_axis)
-    wu = ctx.shard(p["w_up"], None, None, ctx.model_axis)
-    wd = ctx.shard(p["w_down"], None, ctx.model_axis, None)
-
     bspec = ctx.batch_spec
     xg = ctx.shard(x.reshape(groups, n_loc, d), bspec, None, None)
     idg = ids.reshape(groups, n_loc, k)
@@ -123,10 +121,27 @@ def moe_esp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
         lambda xx, ii: bucket_dispatch(xx, ii, e, cap)
     )(xg, idg)
     bufs = ctx.shard(bufs, bspec, None, None, None)     # (G, E, cap, d)
-    h = jnp.einsum("gecd,edf->gecf", bufs, wg)
-    u = jnp.einsum("gecd,edf->gecf", bufs, wu)
-    h = ctx.shard(jax.nn.silu(h) * u, bspec, None, None, ctx.model_axis)
-    y = jnp.einsum("gecf,efd->gecd", h, wd)
+    tp = ctx.n_model
+    f = cfg.moe_d_ff_
+    kernel_ok = ctx.kernels_on and (
+        ctx.mesh is None
+        or (d % tp == 0 and f % tp == 0 and groups % ctx.n_batch == 0)
+    )
+    if kernel_ok:
+        # Count-aware kernel path: the ragged GMM skips capacity rows past
+        # each bucket's fill, so FFN FLOPs track tokens actually routed.
+        counts = jax.vmap(lambda ii, kk: kept_counts(ii, kk, e))(idg, keep)
+        y = esp_expert_ffn(
+            bufs, counts, p["w_gate"], p["w_up"], p["w_down"], ctx
+        )
+    else:
+        wg = ctx.shard(p["w_gate"], None, None, ctx.model_axis)
+        wu = ctx.shard(p["w_up"], None, None, ctx.model_axis)
+        wd = ctx.shard(p["w_down"], None, ctx.model_axis, None)
+        h = jnp.einsum("gecd,edf->gecf", bufs, wg)
+        u = jnp.einsum("gecd,edf->gecf", bufs, wu)
+        h = ctx.shard(jax.nn.silu(h) * u, bspec, None, None, ctx.model_axis)
+        y = jnp.einsum("gecf,efd->gecd", h, wd)
     # Reduce-scatter (d-sharded) instead of a full all-reduce of the padded
     # buckets; the all-gather happens after combine, on the much smaller
     # per-token tensor (§Perf iteration 3).

@@ -19,8 +19,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
+from repro.kernels import registry
+from repro.parallel.compat import shard_map
 from repro.parallel.ctx import ParallelCtx
 
 
@@ -80,6 +81,24 @@ def bucket_combine(
 def scatter_counts(bucket_ids: jax.Array, n_buckets: int) -> jax.Array:
     """Per-bucket token counts (n, k) -> (n_buckets,); feeds the balancer."""
     return jnp.bincount(bucket_ids.reshape(-1), length=n_buckets)
+
+
+def kept_counts(
+    bucket_ids: jax.Array, keep: jax.Array, n_buckets: int
+) -> jax.Array:
+    """Per-bucket *kept* copy counts (capacity drops excluded), int32.
+
+    ``bucket_dispatch`` packs kept copies into slots ``0..count-1`` of their
+    bucket, so these counts are exactly the ``group_sizes`` the ragged GMM
+    kernels consume. Implemented as a scatter-add (vmap-safe, unlike
+    ``jnp.bincount``); out-of-range ids land in a sacrificial row.
+    """
+    b = jnp.where(keep, bucket_ids, n_buckets)
+    return (
+        jnp.zeros((n_buckets + 1,), jnp.int32)
+        .at[b.reshape(-1)]
+        .add(1, mode="drop")[:n_buckets]
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -144,6 +163,7 @@ def ep_moe_shardmap(
     axis = ctx.model_axis
     ep = ctx.n_model
     total_slots = ep * slots_per_device
+    use_kernels = ctx.kernels_on
 
     b, s, d = x.shape
     k = expert_ids.shape[-1]
@@ -168,17 +188,33 @@ def ep_moe_shardmap(
             owned = (jnp.arange(bl * sl) % ep) == rank
             slots = jnp.where(owned[:, None], slots, total_slots + 1)
         bufs, pos, keep = bucket_dispatch(xt, slots, total_slots, cap)
+        # How full each outgoing bucket actually is — rides the same
+        # all_to_all so every device knows its received buckets' raggedness.
+        counts = kept_counts(slots, keep, total_slots)
         # (total_slots, cap, d) -> exchange so each device gets its slots.
         bufs = bufs.reshape(ep, slots_per_device, cap, d)
         recv = jax.lax.all_to_all(bufs, axis, split_axis=0, concat_axis=0, tiled=False)
+        cnt = jax.lax.all_to_all(
+            counts.reshape(ep, slots_per_device), axis,
+            split_axis=0, concat_axis=0, tiled=False,
+        )
         # recv: (ep, slots_per_device, cap, d) — axis 0 now = source rank.
-        recv = recv.transpose(1, 0, 2, 3).reshape(slots_per_device, ep * cap, d)
+        recv = recv.transpose(1, 0, 2, 3)              # (spd, ep, cap, d)
+        cnt = cnt.transpose(1, 0)                      # (spd, ep)
 
-        # Local expert compute: slot e uses weight row e.
-        h = jnp.einsum("ecd,edf->ecf", recv, wg)
-        u = jnp.einsum("ecd,edf->ecf", recv, wu)
-        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, wd)
-
+        # Local expert compute: bucket (slot e, source r) uses weight row e;
+        # the ragged GMM kernels skip capacity rows past each bucket's
+        # count, so FFN FLOPs track tokens actually routed (fallback:
+        # folded einsums over the same layout).
+        y = registry.expert_ffn(
+            recv.reshape(slots_per_device * ep, cap, d),
+            wg,
+            wu,
+            wd,
+            group_sizes=cnt.reshape(-1),
+            groups_per_weight=ep,
+            enabled=use_kernels,
+        )
         y = y.reshape(slots_per_device, ep, cap, d).transpose(1, 0, 2, 3)
         back = jax.lax.all_to_all(y, axis, split_axis=0, concat_axis=0, tiled=False)
         back = back.reshape(total_slots, cap, d)
@@ -214,6 +250,72 @@ def ep_moe_shardmap(
         slot_of,
         n_replicas,
     )
+
+
+# ---------------------------------------------------------------------------
+# ESP expert FFN (kernel path)
+# ---------------------------------------------------------------------------
+
+def esp_expert_ffn(
+    bufs: jax.Array,     # (G, E, cap, d) — per-group expert buckets
+    counts: jax.Array,   # (G, E) kept-token count per bucket
+    wg: jax.Array,       # (E, d, f)
+    wu: jax.Array,       # (E, d, f)
+    wd: jax.Array,       # (E, f, d)
+    ctx: ParallelCtx,
+) -> jax.Array:
+    """Count-aware expert FFN for the ESP path (experts' hidden dim sharded
+    over the model axis, bucket groups over the batch axes).
+
+    Under a mesh the Pallas call must be device-local, so the compute runs
+    under shard_map: each device takes its f-slice of every expert, runs the
+    ragged GMM kernels over its bucket groups, and the partial down-
+    projection sums reduce-scatter onto the d dim (the einsum path's GSPMD
+    layout, §Perf iteration 3). Output is (G, E, cap, d), d sharded over
+    the model axis. Caller gates on divisibility (see ``moe_esp``).
+    """
+    g, e, cap, d = bufs.shape
+
+    def compute(xb, cb, wgb, wub, wdb):
+        gl = xb.shape[0]
+        # (gl, E, cap, d) -> (E*gl, cap, d): expert-major flatten so weight
+        # row = group // gl (the ragged kernels' divisor mapping).
+        xg = xb.transpose(1, 0, 2, 3).reshape(e * gl, cap, -1)
+        y = registry.expert_ffn(
+            xg,
+            wgb,
+            wub,
+            wdb,
+            group_sizes=cb.transpose(1, 0).reshape(-1),
+            groups_per_weight=gl,
+            enabled=True,
+        )
+        return y.reshape(e, gl, cap, -1).transpose(1, 0, 2, 3)
+
+    if ctx.mesh is None:
+        return compute(bufs, counts, wg, wu, wd)
+
+    axis = ctx.model_axis
+    bspec = ctx.batch_spec
+
+    def body(xb, cb, wgb, wub, wdb):
+        y = compute(xb, cb, wgb, wub, wdb)
+        # Partial sums over the f-shards: reduce-scatter onto d.
+        return jax.lax.psum_scatter(y, axis, scatter_dimension=3, tiled=True)
+
+    return shard_map(
+        body,
+        mesh=ctx.mesh,
+        in_specs=(
+            P(bspec, None, None, None),
+            P(bspec, None),
+            P(None, None, axis),
+            P(None, None, axis),
+            P(None, axis, None),
+        ),
+        out_specs=P(bspec, None, None, axis),
+        check_vma=False,
+    )(bufs, counts, wg, wu, wd)
 
 
 # ---------------------------------------------------------------------------

@@ -39,6 +39,11 @@ class ParallelCtx:
     # outputs reduce-scatter to seq-sharded form; the next projection's
     # all-gather is the paper's "retained AG" (§Perf iterations 4-5).
     seq_parallel_acts: bool = False
+    # Pallas kernel dispatch (repro.kernels.registry): "auto" enables the
+    # compiled kernels on TPU only; True forces them everywhere (interpret
+    # mode off-TPU — exact but slow, for tests); False keeps the einsum
+    # reference paths.
+    use_kernels: str | bool = "auto"
 
     @property
     def seq_spec(self):
@@ -70,6 +75,12 @@ class ParallelCtx:
                 n *= self.mesh.shape[a]
             clean.append(sp if dim % n == 0 else None)
         return jax.lax.with_sharding_constraint(x, P(*clean))
+
+    @property
+    def kernels_on(self) -> bool:
+        from repro.kernels.registry import kernels_enabled
+
+        return kernels_enabled(self.use_kernels)
 
     @property
     def n_model(self) -> int:

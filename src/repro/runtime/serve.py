@@ -70,6 +70,11 @@ class Server:
         self.migrations = 0
 
         if self.use_balancer:
+            # Slot-expanded weights require EP dispatch everywhere; the
+            # "auto" impl would pick ESP when n_experts % ep != 0, and ESP
+            # indexes weights by logical expert, not physical slot.
+            if ctx.moe_impl == "auto":
+                self.ctx = ctx = dataclasses.replace(ctx, moe_impl="ep")
             spd = serve_cfg.slots_per_device
             n_slots = self.ep * spd
             if n_slots < cfg.n_experts:

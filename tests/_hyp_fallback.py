@@ -1,0 +1,79 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+Property-test modules import ``given``/``settings``/``strategies`` through
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hyp_fallback import given, settings, strategies as st
+
+With real hypothesis absent this shim replays each property over a fixed
+pseudo-random sample grid (seeded, so runs are reproducible) instead of
+skipping the tests outright. Only the tiny strategy surface this repo uses
+is implemented; install ``hypothesis`` (see requirements-dev.txt) for real
+shrinking/coverage.
+"""
+
+from __future__ import annotations
+
+import random
+
+_MAX_FALLBACK_EXAMPLES = 25  # keep the deterministic replay cheap
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(f):
+        f._hyp_max_examples = max_examples
+        return f
+
+    return deco
+
+
+def given(*arg_strats: _Strategy, **kw_strats: _Strategy):
+    def deco(f):
+        # Zero-arg wrapper (no functools.wraps: pytest must NOT see the
+        # strategy parameters of ``f`` and go hunting for fixtures).
+        def wrapper():
+            n = getattr(wrapper, "_hyp_max_examples", None)
+            if n is None:
+                n = getattr(f, "_hyp_max_examples", 20)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(min(n, _MAX_FALLBACK_EXAMPLES)):
+                args = [s.sample(rng) for s in arg_strats]
+                kwargs = {name: s.sample(rng) for name, s in kw_strats.items()}
+                f(*args, **kwargs)
+
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        wrapper.__module__ = f.__module__
+        wrapper._hyp_max_examples = getattr(f, "_hyp_max_examples", None)
+        return wrapper
+
+    return deco

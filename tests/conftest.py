@@ -3,6 +3,8 @@ import sys
 
 # src-layout import path (tests also run without installation).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# tests dir itself, for the optional-dependency shims (_hyp_fallback).
+sys.path.insert(0, os.path.dirname(__file__))
 
 # NOTE: deliberately no xla_force_host_platform_device_count here — smoke
 # tests and benches must see the real single device. Multi-device scenarios

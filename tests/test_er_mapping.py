@@ -1,6 +1,9 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - deterministic replay shim
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.core.er_mapping import (
     baseline_mapping,

@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - deterministic replay shim
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.configs import get_config, smoke
 from repro.models.attention import (

@@ -33,8 +33,8 @@ def test_ep_esp_decode_parity_8dev():
         from repro.configs import get_config, smoke
         from repro.models.moe import moe_dense, moe_ep, moe_esp, moe_init
         from repro.parallel.ctx import ParallelCtx
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         ctx = ParallelCtx(mesh=mesh, capacity_factor=8.0)
         cfg = dataclasses.replace(smoke(get_config("dbrx-132b")),
                                   n_experts=4, experts_per_token=2)
@@ -68,8 +68,8 @@ def test_ep_gradient_parity_8dev():
         from repro.configs import get_config, smoke
         from repro.models.moe import moe_dense, moe_ep, moe_init
         from repro.parallel.ctx import ParallelCtx
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         ctx = ParallelCtx(mesh=mesh, capacity_factor=8.0)
         cfg = dataclasses.replace(smoke(get_config("dbrx-132b")),
                                   n_experts=4, experts_per_token=2)
@@ -98,8 +98,8 @@ def test_seq_parallel_decode_and_compressed_sync_8dev():
         from repro.parallel.collectives import seq_parallel_decode_attend
         from repro.models.attention import gqa_attend
         from repro.parallel.ctx import ParallelCtx
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         ctx = ParallelCtx(mesh=mesh)
         q = jax.random.normal(jax.random.PRNGKey(1), (2, 1, 8, 16))
         k = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 4, 16))
@@ -110,8 +110,7 @@ def test_seq_parallel_decode_and_compressed_sync_8dev():
             out = jax.jit(lambda q,k,v,m: seq_parallel_decode_attend(q,k,v,m,ctx))(q,k,v,mask)
         assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
         # compressed cross-pod sync: mean preserved within int8 error
-        mesh2 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh2 = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
         from repro.parallel.grad_compress import compressed_pod_mean
         tree = {"w": jax.random.normal(jax.random.PRNGKey(5), (64, 33))}
         with mesh2:
@@ -134,8 +133,8 @@ def test_server_migration_preserves_outputs_8dev():
         from repro.models import transformer as T
         from repro.runtime.serve import Server, ServeConfig
         from repro.parallel.ctx import ParallelCtx
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         ctx = ParallelCtx(mesh=mesh, capacity_factor=8.0)
         cfg = dataclasses.replace(smoke(get_config("dbrx-132b")),
                                   n_experts=8, experts_per_token=2)
@@ -167,8 +166,8 @@ def test_dryrun_machinery_small_mesh():
         import repro.launch.dryrun as D
         from repro.configs import get_config
         from repro.configs.base import ShapeConfig
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         cfg = dataclasses.replace(get_config("llama3.2-1b"), n_layers=2)
         shape = ShapeConfig("t", 256, 8, "train")
         with mesh:

@@ -1,21 +1,30 @@
 #!/usr/bin/env bash
-# One-command gate: tier-1 tests + a fast interpret-mode kernel smoke.
+# One-command gate: tier-1 tests + interpret-mode kernel & bench smokes.
 #
-#   ./scripts/check.sh          # full gate
+#   ./scripts/check.sh          # fast tier (-m "not slow") + smokes
+#   ./scripts/check.sh --all    # full matrix incl. slow multidevice tests
 #   ./scripts/check.sh -k gmm   # extra args forwarded to the tier-1 pytest
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q "$@"
+MARK=(-m "not slow")
+TIER="fast tier (-m 'not slow'; --all for the full matrix)"
+if [[ "${1:-}" == "--all" ]]; then
+  MARK=()
+  TIER="full matrix"
+  shift
+fi
+
+echo "== tier-1: pytest [$TIER] =="
+python -m pytest -x -q ${MARK[@]+"${MARK[@]}"} "$@"
 
 echo "== kernel smoke (interpret mode) =="
 python - <<'EOF'
 import jax, jax.numpy as jnp, numpy as np
-from repro.kernels.gmm.ops import expert_ffn_ragged
-from repro.kernels.gmm.ref import expert_ffn_ragged_ref
+from repro.kernels.gmm.ops import expert_ffn_gather, expert_ffn_ragged
+from repro.kernels.gmm.ref import expert_ffn_gather_ref, expert_ffn_ragged_ref
 from repro.kernels.registry import attend, decode_attend
 from repro.models.attention import causal_mask, gqa_attend
 
@@ -31,6 +40,14 @@ np.testing.assert_allclose(
     np.asarray(expert_ffn_ragged_ref(x, wg, wu, wd, gs)),
     rtol=1e-5, atol=1e-5)
 
+# fused dispatch-gather: flat rows + per-bucket offsets, no padded buffer
+rows = jax.random.normal(ks[0], (24, 8))
+offs = jnp.asarray([0, 0, 5, 21], jnp.int32)
+np.testing.assert_allclose(
+    np.asarray(expert_ffn_gather(rows, wg, wu, wd, offs, gs, capacity=16)),
+    np.asarray(expert_ffn_gather_ref(rows, wg, wu, wd, offs, gs, 16)),
+    rtol=1e-5, atol=1e-5)
+
 q = jax.random.normal(ks[0], (1, 32, 4, 16))
 k = jax.random.normal(ks[1], (1, 32, 2, 16))
 v = jax.random.normal(ks[2], (1, 32, 2, 16))
@@ -44,5 +61,9 @@ out = decode_attend(q[:, 0], k, v, valid)
 assert np.isfinite(np.asarray(out)).all()
 print("kernel smoke OK")
 EOF
+
+echo "== kernel-dispatch bench smoke (interpret mode) =="
+python benchmarks/bench_kernels.py --smoke > /dev/null
+echo "bench smoke OK"
 
 echo "ALL CHECKS PASSED"

@@ -13,7 +13,12 @@ import functools
 import jax
 
 from repro.kernels.gmm.gmm import gmm, gmm_dual_act
-from repro.kernels.gmm.ragged import gmm_dual_act_ragged, gmm_ragged
+from repro.kernels.gmm.ragged import (
+    gmm_dual_act_gather,
+    gmm_dual_act_ragged,
+    gmm_gather,
+    gmm_ragged,
+)
 
 
 def _default_interpret() -> bool:
@@ -68,6 +73,61 @@ def expert_ffn_ragged(
     h = gmm_dual_act_ragged(
         x, wg, wu, group_sizes,
         groups_per_weight=groups_per_weight, interpret=interpret,
+    )
+    return gmm_ragged(
+        h, wd, group_sizes,
+        groups_per_weight=groups_per_weight, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "groups_per_weight", "interpret")
+)
+def gmm_gather_op(
+    x,
+    w,
+    offsets,
+    group_sizes,
+    capacity: int,
+    groups_per_weight: int = 1,
+    interpret: bool | None = None,
+):
+    interpret = _default_interpret() if interpret is None else interpret
+    return gmm_gather(
+        x,
+        w,
+        offsets,
+        group_sizes,
+        capacity=capacity,
+        groups_per_weight=groups_per_weight,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "groups_per_weight", "interpret")
+)
+def expert_ffn_gather(
+    x,
+    wg,
+    wu,
+    wd,
+    offsets,
+    group_sizes,
+    capacity: int,
+    groups_per_weight: int = 1,
+    interpret: bool | None = None,
+):
+    """Fused dispatch-scatter expert FFN: the SwiGLU front half gathers
+    token rows straight from the flat ``(R, D)`` activations (per-bucket
+    offsets in scalar prefetch), the down projection runs ragged over the
+    bucket-padded hidden tensor. The ``(G, capacity, D)`` input buffer is
+    never materialized."""
+    interpret = _default_interpret() if interpret is None else interpret
+    h = gmm_dual_act_gather(
+        x, wg, wu, offsets, group_sizes,
+        capacity=capacity, groups_per_weight=groups_per_weight,
+        interpret=interpret,
     )
     return gmm_ragged(
         h, wd, group_sizes,

@@ -20,6 +20,19 @@ weight row — the layout both MoE paths produce after flattening:
 VMEM per step matches the padded kernels (the scalar counts live in SMEM);
 the grid is identical, so the only cost of raggedness is the SMEM read and
 the per-tile predicate.
+
+``gmm_gather`` / ``gmm_dual_act_gather`` go one step further and fuse the
+*dispatch* into the kernel prologue: instead of consuming pre-packed
+``(G, capacity, d)`` buffers, they read token rows straight out of a flat
+``(R, d)`` activations array in which bucket ``g``'s rows sit contiguously
+at ``[offsets[g], offsets[g] + counts[g])`` (the compacted order
+``dispatch_metadata`` emits). Both ``offsets`` and ``counts`` ride as
+scalar-prefetch operands; each live row-tile issues one dynamic-offset DMA
+(``pltpu.make_async_copy`` from the ANY-space flat array into a VMEM
+scratch tile) and feeds the MXU from the scratch. The padded bucket tensor
+is never materialized in HBM — that's the one dispatch round-trip per MoE
+layer the fused path removes. Dead tiles skip the DMA *and* the MXU, so
+the ragged FLOP/byte accounting is unchanged.
 """
 
 from __future__ import annotations
@@ -168,3 +181,190 @@ def gmm_dual_act_ragged(
         out_shape=jax.ShapeDtypeStruct((g, c, f), x.dtype),
         interpret=interpret,
     )(group_sizes.astype(jnp.int32), x, wg, wu)
+
+
+# ---------------------------------------------------------------------------
+# fused dispatch-gather variants (flat rows + per-bucket offsets)
+# ---------------------------------------------------------------------------
+
+def _pad_rows(x: jax.Array, bm: int) -> tuple[jax.Array, int]:
+    """Append ``bm`` zero rows so a tile DMA starting anywhere inside a
+    valid segment never runs off the end of the flat array (partial tiles
+    over-read up to ``bm - 1`` rows; the tail is masked in the epilogue)."""
+    return jnp.pad(x, ((0, bm), (0, 0))), x.shape[0] + bm
+
+
+def _gather_tile(x_any, xbuf, sem, off_ref, gi, mi, k, *, bm, bk, r_max):
+    """DMA one (bm, bk) row-tile of bucket ``gi`` from the flat array."""
+    start = jnp.minimum(off_ref[gi] + mi * bm, r_max)
+    cp = pltpu.make_async_copy(
+        x_any.at[pl.ds(start, bm), pl.ds(k * bk, bk)], xbuf, sem
+    )
+    cp.start()
+    cp.wait()
+
+
+def _gather_kernel(
+    off_ref, gs_ref, x_any, w_ref, o_ref, acc_ref, xbuf, sem,
+    *, nk: int, bm: int, bk: int, r_max: int,
+):
+    gi = pl.program_id(0)
+    mi = pl.program_id(1)
+    k = pl.program_id(3)
+    count = gs_ref[gi]
+    live = mi * bm < count
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(live)
+    def _():
+        _gather_tile(x_any, xbuf, sem, off_ref, gi, mi, k, bm=bm, bk=bk, r_max=r_max)
+        acc_ref[...] += jax.lax.dot_general(
+            xbuf[...],
+            w_ref[0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == nk - 1)
+    def _():
+        rows = mi * bm + jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 0)
+        o_ref[0, ...] = jnp.where(rows < count, acc_ref[...], 0.0).astype(
+            o_ref.dtype
+        )
+
+
+def gmm_gather(
+    x: jax.Array,            # (R, D) flat token rows, bucket-contiguous
+    w: jax.Array,            # (G // gpw, D, F)
+    offsets: jax.Array,      # (G,) int32 — bucket g's first row in x
+    group_sizes: jax.Array,  # (G,) int32 — bucket g's row count
+    *,
+    capacity: int,
+    groups_per_weight: int = 1,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """y[g, :count_g] = x[offsets[g] : offsets[g]+count_g] @ w[g // gpw].
+
+    Output is bucket-padded ``(G, capacity, F)`` with zero tails (identical
+    contract to ``gmm_ragged``), but the input is the *flat* compacted rows
+    — no ``(G, capacity, D)`` buffer ever exists.
+    """
+    r, d = x.shape
+    f = w.shape[-1]
+    gpw = groups_per_weight
+    g = w.shape[0] * gpw
+    assert offsets.shape == (g,), (offsets.shape, g)
+    bm, bn, bk = _tile(capacity, bm), _tile(f, bn), _tile(d, bk)
+    x, r_pad = _pad_rows(x, bm)
+    nk = d // bk
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(g, capacity // bm, f // bn, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, bk, bn), lambda gi, i, j, k, off, gs: (gi // gpw, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gi, i, j, k, off, gs: (gi, i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bk), x.dtype),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _gather_kernel, nk=nk, bm=bm, bk=bk, r_max=r_pad - bm
+        ),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((g, capacity, f), x.dtype),
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), group_sizes.astype(jnp.int32), x, w)
+
+
+def _gather_dual_kernel(
+    off_ref, gs_ref, x_any, wg_ref, wu_ref, o_ref, accg_ref, accu_ref, xbuf, sem,
+    *, nk: int, bm: int, bk: int, r_max: int,
+):
+    gi = pl.program_id(0)
+    mi = pl.program_id(1)
+    k = pl.program_id(3)
+    count = gs_ref[gi]
+    live = mi * bm < count
+
+    @pl.when(k == 0)
+    def _():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    @pl.when(live)
+    def _():
+        _gather_tile(x_any, xbuf, sem, off_ref, gi, mi, k, bm=bm, bk=bk, r_max=r_max)
+        dims = (((1,), (0,)), ((), ()))
+        accg_ref[...] += jax.lax.dot_general(
+            xbuf[...], wg_ref[0], dims, preferred_element_type=jnp.float32
+        )
+        accu_ref[...] += jax.lax.dot_general(
+            xbuf[...], wu_ref[0], dims, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == nk - 1)
+    def _():
+        rows = mi * bm + jax.lax.broadcasted_iota(jnp.int32, accg_ref.shape, 0)
+        h = jax.nn.silu(accg_ref[...]) * accu_ref[...]
+        o_ref[0, ...] = jnp.where(rows < count, h, 0.0).astype(o_ref.dtype)
+
+
+def gmm_dual_act_gather(
+    x: jax.Array,            # (R, D) flat token rows, bucket-contiguous
+    wg: jax.Array,           # (G // gpw, D, F)
+    wu: jax.Array,           # (G // gpw, D, F)
+    offsets: jax.Array,      # (G,)
+    group_sizes: jax.Array,  # (G,)
+    *,
+    capacity: int,
+    groups_per_weight: int = 1,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """h[g] = silu(rows_g @ wg) * (rows_g @ wu) with the fused gather
+    prologue; rows_g are read from the flat array via per-bucket offsets."""
+    r, d = x.shape
+    f = wg.shape[-1]
+    gpw = groups_per_weight
+    g = wg.shape[0] * gpw
+    assert offsets.shape == (g,), (offsets.shape, g)
+    bm, bn, bk = _tile(capacity, bm), _tile(f, bn), _tile(d, bk)
+    x, r_pad = _pad_rows(x, bm)
+    nk = d // bk
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(g, capacity // bm, f // bn, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, bk, bn), lambda gi, i, j, k, off, gs: (gi // gpw, k, j)),
+            pl.BlockSpec((1, bk, bn), lambda gi, i, j, k, off, gs: (gi // gpw, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gi, i, j, k, off, gs: (gi, i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bk), x.dtype),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _gather_dual_kernel, nk=nk, bm=bm, bk=bk, r_max=r_pad - bm
+        ),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((g, capacity, f), x.dtype),
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), group_sizes.astype(jnp.int32), x, wg, wu)

@@ -61,3 +61,35 @@ def expert_ffn_ragged_ref(
     if group_sizes is None:
         return y
     return y * _row_mask(c, group_sizes).astype(y.dtype)
+
+
+def gather_buckets_ref(
+    x: jax.Array,            # (R, D) flat rows, bucket-contiguous
+    offsets: jax.Array,      # (G,)
+    group_sizes: jax.Array,  # (G,)
+    capacity: int,
+) -> jax.Array:
+    """Oracle for the gather prologue: materialize the (G, capacity, D)
+    buckets the fused kernels never write. Differentiable in ``x``."""
+    r = x.shape[0]
+    idx = offsets[:, None] + jnp.arange(capacity)[None, :]        # (G, cap)
+    buckets = x[jnp.clip(idx, 0, max(r - 1, 0))]
+    return buckets * _row_mask(capacity, group_sizes).astype(buckets.dtype)
+
+
+def expert_ffn_gather_ref(
+    x: jax.Array,
+    wg: jax.Array,
+    wu: jax.Array,
+    wd: jax.Array,
+    offsets: jax.Array,
+    group_sizes: jax.Array,
+    capacity: int,
+    groups_per_weight: int = 1,
+):
+    """Oracle for the fused dispatch-gather expert FFN: explicit gather
+    into padded buckets, then the ragged FFN oracle."""
+    buckets = gather_buckets_ref(x, offsets, group_sizes, capacity)
+    return expert_ffn_ragged_ref(
+        buckets, wg, wu, wd, group_sizes, groups_per_weight
+    )

@@ -34,8 +34,9 @@ import numpy as np
 
 from repro.kernels.flash_attention.ops import flash_attention_op
 from repro.kernels.flash_decode.ops import flash_decode_op
+from repro.kernels.gmm.ops import expert_ffn_gather as _expert_ffn_gather_op
 from repro.kernels.gmm.ops import expert_ffn_ragged as _expert_ffn_ragged_op
-from repro.kernels.gmm.ref import expert_ffn_ragged_ref
+from repro.kernels.gmm.ref import expert_ffn_gather_ref, expert_ffn_ragged_ref
 
 
 # ---------------------------------------------------------------------------
@@ -139,6 +140,80 @@ def expert_ffn(
         return _ffn_kernel(groups_per_weight, interpret, x, wg, wu, wd, gs)
     return expert_ffn_ragged_ref(
         x, wg, wu, wd, group_sizes, groups_per_weight
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused dispatch-gather expert FFN (flat rows + per-bucket offsets)
+# ---------------------------------------------------------------------------
+
+def can_gmm_gather(capacity: int, d: int, f: int, interpret: bool) -> bool:
+    """Can the fused gather kernels take flat rows into (G, capacity) buckets
+    with (d, f) expert dims? Same MXU-tiling gates as the ragged kernels
+    (the flat array itself stays in ANY memory — no row-count constraint)."""
+    return can_gmm(capacity, d, f, interpret) and can_gmm(capacity, f, d, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _ffn_gather_kernel(cap, gpw, interpret, x, wg, wu, wd, offsets, group_sizes):
+    return _expert_ffn_gather_op(
+        x, wg, wu, wd, offsets, group_sizes,
+        capacity=cap, groups_per_weight=gpw, interpret=interpret,
+    )
+
+
+def _ffn_gather_fwd(cap, gpw, interpret, x, wg, wu, wd, offsets, group_sizes):
+    y = _ffn_gather_kernel(cap, gpw, interpret, x, wg, wu, wd, offsets, group_sizes)
+    return y, (x, wg, wu, wd, offsets, group_sizes)
+
+
+def _ffn_gather_bwd(cap, gpw, interpret, res, ct):
+    # Reference-math backward: the gather is a plain jnp take, so the
+    # cotangent scatters back onto the flat rows for free.
+    x, wg, wu, wd, offs, gs = res
+    _, vjp = jax.vjp(
+        lambda a, b, c, d: expert_ffn_gather_ref(a, b, c, d, offs, gs, cap, gpw),
+        x, wg, wu, wd,
+    )
+    return (*vjp(ct), _zero_ct(offs), _zero_ct(gs))
+
+
+_ffn_gather_kernel.defvjp(_ffn_gather_fwd, _ffn_gather_bwd)
+
+
+def expert_ffn_from_rows(
+    x: jax.Array,            # (R, D) flat token rows, bucket-contiguous
+    wg: jax.Array,           # (G/gpw, D, F)
+    wu: jax.Array,           # (G/gpw, D, F)
+    wd: jax.Array,           # (G/gpw, F, D)
+    offsets: jax.Array,      # (G,) int32 first-row index per bucket
+    group_sizes: jax.Array,  # (G,) int32 rows per bucket
+    *,
+    capacity: int,
+    groups_per_weight: int = 1,
+    enabled: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused dispatch-scatter grouped SwiGLU FFN.
+
+    Bucket ``g``'s tokens are rows ``offsets[g] .. offsets[g]+count_g`` of
+    the flat array; the kernel prologue gathers them tile-by-tile (dynamic-
+    offset DMA), so the padded ``(G, capacity, D)`` dispatch buffer is never
+    written to HBM. Output keeps the bucket-padded ``(G, capacity, D)``
+    contract of ``expert_ffn`` (zero tails). Falls back to the reference
+    gather + einsum math when disabled or when shapes don't tile.
+    """
+    d = x.shape[-1]
+    f = wg.shape[-1]
+    interpret = default_interpret() if interpret is None else interpret
+    if enabled and can_gmm_gather(capacity, d, f, interpret):
+        return _ffn_gather_kernel(
+            capacity, groups_per_weight, interpret,
+            x, wg, wu, wd,
+            offsets.astype(jnp.int32), group_sizes.astype(jnp.int32),
+        )
+    return expert_ffn_gather_ref(
+        x, wg, wu, wd, offsets, group_sizes, capacity, groups_per_weight
     )
 
 

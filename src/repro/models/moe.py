@@ -20,13 +20,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import registry
 from repro.models.layers import normal_init
 from repro.parallel.collectives import (
+    bucket_capacity,
     bucket_combine,
     bucket_dispatch,
+    dispatch_metadata,
     ep_moe_shardmap,
     esp_expert_ffn,
     kept_counts,
+    tiled_placement,
     uniform_placement,
 )
 from repro.parallel.ctx import ParallelCtx
@@ -111,7 +115,33 @@ def moe_esp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
     e = cfg.n_experts
     groups = ctx.n_batch if (ctx.mesh is not None and b % ctx.n_batch == 0) else 1
     n_loc = (b // groups) * s
-    cap = max(int(n_loc * k * ctx.capacity_factor / e), 8)
+    cap = bucket_capacity(n_loc, k, ctx.capacity_factor, e)
+
+    f = cfg.moe_d_ff_
+    if (
+        ctx.mesh is None
+        and ctx.kernels_on
+        and registry.can_gmm_gather(cap, d, f, registry.default_interpret())
+    ):
+        # Fused dispatch-gather path (single group, no mesh): the gather
+        # GMM reads token rows straight from the flat activations via
+        # per-expert offsets — the (E, cap, d) dispatch buffer is never
+        # materialized.
+        ids2 = ids.reshape(b * s, k)
+        row_ids, offsets, counts, slots, keep = dispatch_metadata(ids2, e, cap)
+        rows = x.reshape(b * s, d)[row_ids]
+        y = registry.expert_ffn_from_rows(
+            rows,
+            p["w_gate"],
+            p["w_up"],
+            p["w_down"],
+            offsets,
+            counts,
+            capacity=cap,
+            enabled=True,
+        )
+        out = bucket_combine(y, ids2, slots, keep, w.reshape(b * s, k))
+        return out.reshape(b, s, d), _aux(aux, ids, cfg)
 
     bspec = ctx.batch_spec
     xg = ctx.shard(x.reshape(groups, n_loc, d), bspec, None, None)
@@ -122,7 +152,6 @@ def moe_esp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
     )(xg, idg)
     bufs = ctx.shard(bufs, bspec, None, None, None)     # (G, E, cap, d)
     tp = ctx.n_model
-    f = cfg.moe_d_ff_
     kernel_ok = ctx.kernels_on and (
         ctx.mesh is None
         or (d % tp == 0 and f % tp == 0 and groups % ctx.n_batch == 0)
@@ -175,21 +204,39 @@ def moe_ep(
     e = cfg.n_experts
     n_rows = p["w_gate"].shape[0]  # physical slot rows (>= n_experts when
     # the Server pre-expanded shadow slots)
+    tiled = False
     if slot_weights is None:
-        if n_rows % ep == 0:
-            slots_per_device = slots_per_device or n_rows // ep
-            slot_weights = p  # slot i holds expert i % E
+        slots_per_device = slots_per_device or max(-(-n_rows // ep), 1)
+        n_slots = ep * slots_per_device
+        if n_slots < n_rows:
+            raise ValueError(
+                f"slots_per_device={slots_per_device} gives {n_slots} physical "
+                f"slots < {n_rows} weight rows — experts would be dropped; "
+                f"need at least ceil(n_rows / ep) = {-(-n_rows // ep)}"
+            )
+        if n_slots == n_rows:
+            slot_weights = p  # slot i holds weight row i (identity)
         else:
-            slots_per_device = slots_per_device or max(-(-n_rows // ep), 1)
-            n_slots = ep * slots_per_device
+            # Wrap-around shadow slots: slot i holds weight row i % n_rows
+            # (covers both n_rows % ep != 0 and an explicitly larger
+            # slots_per_device).
             reps = -(-n_slots // n_rows)
             slot_weights = {
                 k2: jnp.tile(p[k2], (reps, 1, 1))[:n_slots]
                 for k2 in ("w_gate", "w_up", "w_down")
             }
+            tiled = True
     n_slots = ep * slots_per_device
     if placement is None:
-        slot_of, n_replicas = uniform_placement(e, n_slots)
+        if tiled:
+            # The tile above put weight row ``s % n_rows`` on slot ``s`` —
+            # the default placement must route expert e to exactly those
+            # slots (every s with s % n_rows == e), or the wrap-around
+            # shadow slots would hold live weights that never see traffic
+            # while still inflating the capacity denominator.
+            slot_of, n_replicas = tiled_placement(e, n_rows, n_slots)
+        else:
+            slot_of, n_replicas = uniform_placement(e, n_slots)
     else:
         slot_of, n_replicas = placement
 

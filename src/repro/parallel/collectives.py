@@ -15,6 +15,7 @@ steps without recompilation.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -25,9 +26,68 @@ from repro.parallel.compat import shard_map
 from repro.parallel.ctx import ParallelCtx
 
 
+def bucket_capacity(n_tok: int, k: int, capacity_factor: float, n_buckets: int) -> int:
+    """Per-bucket capacity for ``n_tok`` tokens x ``k`` copies over
+    ``n_buckets`` buckets. **Ceiling** division: floor truncation silently
+    under-allocates (e.g. 100 copies over 3 buckets at factor 1.0 floored to
+    33 drops a copy even under perfectly balanced routing). Floored at 8 so
+    tiny smoke shapes keep a usable bucket."""
+    return max(math.ceil(n_tok * k * capacity_factor / n_buckets), 8)
+
+
 # ---------------------------------------------------------------------------
 # bucket dispatch (pure jnp, static shapes, differentiable in x / weights)
 # ---------------------------------------------------------------------------
+
+def dispatch_metadata(
+    bucket_ids: jax.Array,  # (n, k) target bucket per token copy
+    n_buckets: int,
+    capacity: int,
+):
+    """Metadata-only dispatch: the sort/position math of ``bucket_dispatch``
+    without writing the padded ``(n_buckets, capacity, d)`` buffers.
+
+    Returns ``(row_ids, offsets, counts, slots, keep)``:
+
+    * ``row_ids`` (n*k,) — source token index per *compacted* position: the
+      flat array ``x[row_ids]`` holds bucket 0's copies, then bucket 1's, …
+      (within a bucket, earlier tokens first — the same deterministic order
+      ``bucket_dispatch`` packs). Copies past capacity and out-of-range
+      bucket ids (e.g. the decode ownership sentinel) sort to each bucket's
+      tail / past every real bucket and are simply never addressed by
+      ``offsets``/``counts``.
+    * ``offsets`` (n_buckets,) int32 — bucket g's first compacted row.
+    * ``counts`` (n_buckets,) int32 — bucket g's *kept* copies
+      (== ``kept_counts``): rows ``offsets[g] .. offsets[g]+counts[g]`` of
+      the compacted array are exactly bucket g's surviving tokens.
+    * ``slots`` (n, k) / ``keep`` (n, k) — identical to ``bucket_dispatch``
+      (within-bucket position, capacity-survival mask) for the combine.
+
+    This is the operand layout the fused gather kernels
+    (``kernels.gmm.ragged.gmm_gather``) consume via scalar prefetch.
+    """
+    n, k = bucket_ids.shape
+    flat_b = bucket_ids.reshape(-1)                       # (n*k,)
+
+    order = jnp.argsort(flat_b, stable=True)
+    b_sorted = flat_b[order]
+    # Out-of-range ids are dropped by bincount, so valid-bucket counts and
+    # offsets are sentinel-proof (sentinels sort past every real bucket).
+    counts_all = jnp.bincount(flat_b, length=n_buckets)
+    offsets = jnp.concatenate(
+        [jnp.zeros(1, counts_all.dtype), jnp.cumsum(counts_all)[:-1]]
+    )
+    idx_sorted = jnp.arange(n * k) - offsets[b_sorted]
+
+    # Undo the sort to index by (token, k).
+    slots = jnp.zeros(n * k, dtype=jnp.int32).at[order].set(
+        idx_sorted.astype(jnp.int32)
+    )
+    keep = (slots < capacity) & (flat_b < n_buckets)  # drop out-of-range ids too
+    row_ids = (order // k).astype(jnp.int32)          # copy j came from token j//k
+    counts = jnp.minimum(counts_all, capacity).astype(jnp.int32)
+    return row_ids, offsets.astype(jnp.int32), counts, slots.reshape(n, k), keep.reshape(n, k)
+
 
 def bucket_dispatch(
     x: jax.Array,          # (n, d) token activations
@@ -40,28 +100,24 @@ def bucket_dispatch(
     Returns ``(buffers, slots, keep)`` where ``slots[n, k]`` is the
     within-bucket position of each copy and ``keep[n, k]`` masks copies that
     fit under capacity. Deterministic: earlier tokens win bucket slots.
+
+    This is the materialized fallback; the fused kernel path uses
+    ``dispatch_metadata`` + the gather kernels and never writes the buffers.
     """
     n, k = bucket_ids.shape
     d = x.shape[-1]
     flat_b = bucket_ids.reshape(-1)                       # (n*k,)
     flat_src = jnp.repeat(jnp.arange(n), k)               # (n*k,)
-
-    order = jnp.argsort(flat_b, stable=True)
-    b_sorted = flat_b[order]
-    counts = jnp.bincount(flat_b, length=n_buckets)
-    offsets = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
-    idx_sorted = jnp.arange(n * k) - offsets[b_sorted]
-
-    # Undo the sort to index by (token, k).
-    slots = jnp.zeros(n * k, dtype=jnp.int32).at[order].set(idx_sorted.astype(jnp.int32))
-    keep = (slots < capacity) & (flat_b < n_buckets)  # drop out-of-range ids too
+    _, _, _, slots, keep = dispatch_metadata(bucket_ids, n_buckets, capacity)
 
     # Scatter kept copies; overflow goes to a sacrificial extra bucket row.
-    slot_b = jnp.where(keep, flat_b, n_buckets)
-    slot_i = jnp.minimum(slots, capacity - 1)
+    flat_keep = keep.reshape(-1)
+    flat_slots = slots.reshape(-1)
+    slot_b = jnp.where(flat_keep, flat_b, n_buckets)
+    slot_i = jnp.minimum(flat_slots, capacity - 1)
     buffers = jnp.zeros((n_buckets + 1, capacity, d), dtype=x.dtype)
     buffers = buffers.at[slot_b, slot_i].set(x[flat_src], mode="drop")
-    return buffers[:n_buckets], slots.reshape(n, k), keep.reshape(n, k)
+    return buffers[:n_buckets], slots, keep
 
 
 def bucket_combine(
@@ -130,6 +186,35 @@ def uniform_placement(n_experts: int, n_slots: int, r_max: int = 4):
     return jnp.asarray(slot_of), jnp.asarray(n_replicas)
 
 
+def tiled_placement(n_experts: int, n_rows: int, n_slots: int, r_max: int = 4):
+    """Placement consistent with ``jnp.tile``-expanded slot weights.
+
+    When ``moe_ep`` pads a non-divisible expert count up to ``n_slots``
+    physical slots by tiling the weight rows, slot ``s`` holds weight row
+    ``s % n_rows`` — i.e. expert ``s % n_rows`` for the identity rows
+    (``row j == expert j`` for ``j < n_experts``, which is what ``moe_init``
+    produces). The matching placement therefore gives expert ``e`` a replica
+    at *every* slot ``s < n_slots`` with ``s % n_rows == e`` — so routed
+    tokens provably land on slots holding their expert's weights, and the
+    wrap-around shadow slots carry real traffic instead of sitting idle
+    while still being counted in the capacity denominator.
+    """
+    import numpy as np
+
+    assert n_experts <= n_rows <= n_slots, (n_experts, n_rows, n_slots)
+    # Every wrap-around replica must fit the table, or truncated experts
+    # would leave live tiled slots idle (the bug this placement fixes).
+    r_max = max(r_max, -(-n_slots // n_rows))
+    slot_of = np.zeros((n_experts, r_max), dtype=np.int32)
+    n_replicas = np.zeros(n_experts, dtype=np.int32)
+    for e in range(n_experts):
+        reps = list(range(e, n_slots, n_rows))
+        n_replicas[e] = len(reps)
+        for r in range(r_max):
+            slot_of[e, r] = reps[min(r, len(reps) - 1)]
+    return jnp.asarray(slot_of), jnp.asarray(n_replicas)
+
+
 # ---------------------------------------------------------------------------
 # EP all-to-all under shard_map
 # ---------------------------------------------------------------------------
@@ -167,11 +252,44 @@ def ep_moe_shardmap(
 
     b, s, d = x.shape
     k = expert_ids.shape[-1]
+    f = slot_weights["w_gate"].shape[-1]
     if decode:
         n_tok = max(b // ctx.n_batch, 1)           # distinct tokens per EP group
     else:
         n_tok = b * s // (ctx.n_batch * ep)        # tokens per device, seq split
-    cap = max(int(n_tok * k * capacity_factor / total_slots), 8)
+    cap = bucket_capacity(n_tok, k, capacity_factor, total_slots)
+    # Fused dispatch-gather path: token rows ship rank-compacted (packed
+    # back-to-back per destination rank inside the statically-sized
+    # exchange buffer — all_to_all needs equal splits, so wire bytes are
+    # unchanged) and the gather GMM reads the received rows via per-bucket
+    # offsets. What the fusion removes is the receive side: no
+    # (spd, ep, cap, d) transpose/repack and no padded FFN input buffer is
+    # ever materialized. Padded bucket_dispatch remains the fallback when
+    # the kernels are off or shapes don't tile for the compiled kernel.
+    fused = use_kernels and registry.can_gmm_gather(
+        cap, d, f, registry.default_interpret()
+    )
+    spd = slots_per_device
+
+    def dispatch_fused(xt, slots):
+        """Rank-compacted send buffer + per-bucket metadata (no padding
+        between a rank's buckets; bucket order within a rank preserved)."""
+        n = xt.shape[0]
+        _, _, kept, pos, keep = dispatch_metadata(slots, total_slots, cap)
+        kept_rk = kept.reshape(ep, spd)
+        # Within-rank row offset of each bucket (exclusive cumsum over the
+        # rank's buckets).
+        wro = jnp.cumsum(kept_rk, axis=1) - kept_rk           # (ep, spd)
+        flat_b = slots.reshape(-1)
+        safe_b = jnp.minimum(flat_b, total_slots - 1)
+        dest = flat_b // spd                                  # >= ep for sentinels
+        posr = wro.reshape(-1)[safe_b] + pos.reshape(-1)
+        posr = jnp.where(keep.reshape(-1), posr, spd * cap)   # overflow -> drop
+        send = jnp.zeros((ep, spd * cap, d), dtype=xt.dtype)
+        send = send.at[dest, posr].set(
+            xt[jnp.repeat(jnp.arange(n), k)], mode="drop"
+        )
+        return send, kept_rk, pos, keep
 
     def body(x_blk, eid_blk, w_blk, wg, wu, wd, slot_of_, n_rep_):
         # x_blk: (B_loc, S_loc, d) — this device's token slice.
@@ -187,35 +305,67 @@ def ep_moe_shardmap(
             rank = jax.lax.axis_index(axis)
             owned = (jnp.arange(bl * sl) % ep) == rank
             slots = jnp.where(owned[:, None], slots, total_slots + 1)
-        bufs, pos, keep = bucket_dispatch(xt, slots, total_slots, cap)
-        # How full each outgoing bucket actually is — rides the same
-        # all_to_all so every device knows its received buckets' raggedness.
-        counts = kept_counts(slots, keep, total_slots)
-        # (total_slots, cap, d) -> exchange so each device gets its slots.
-        bufs = bufs.reshape(ep, slots_per_device, cap, d)
-        recv = jax.lax.all_to_all(bufs, axis, split_axis=0, concat_axis=0, tiled=False)
-        cnt = jax.lax.all_to_all(
-            counts.reshape(ep, slots_per_device), axis,
-            split_axis=0, concat_axis=0, tiled=False,
-        )
-        # recv: (ep, slots_per_device, cap, d) — axis 0 now = source rank.
-        recv = recv.transpose(1, 0, 2, 3)              # (spd, ep, cap, d)
-        cnt = cnt.transpose(1, 0)                      # (spd, ep)
 
-        # Local expert compute: bucket (slot e, source r) uses weight row e;
-        # the ragged GMM kernels skip capacity rows past each bucket's
-        # count, so FFN FLOPs track tokens actually routed (fallback:
-        # folded einsums over the same layout).
-        y = registry.expert_ffn(
-            recv.reshape(slots_per_device * ep, cap, d),
-            wg,
-            wu,
-            wd,
-            group_sizes=cnt.reshape(-1),
-            groups_per_weight=ep,
-            enabled=use_kernels,
-        )
-        y = y.reshape(slots_per_device, ep, cap, d).transpose(1, 0, 2, 3)
+        if fused:
+            send, kept_rk, pos, keep = dispatch_fused(xt, slots)
+            recv = jax.lax.all_to_all(
+                send, axis, split_axis=0, concat_axis=0, tiled=False
+            )
+            cnt = jax.lax.all_to_all(
+                kept_rk, axis, split_axis=0, concat_axis=0, tiled=False
+            )
+            # recv[r'] = my spd buckets' rows from source rank r', bucket-
+            # compacted; cnt[r', s] = that segment's per-bucket fill.
+            roff = jnp.cumsum(cnt, axis=1) - cnt              # (ep, spd)
+            # Group gi = s*ep + r' (weight row = gi // ep, as the padded
+            # layout) -> flat row offset r'*spd*cap + roff[r', s].
+            base = jnp.arange(ep, dtype=jnp.int32)[:, None] * (spd * cap)
+            offsets_g = (roff + base).transpose(1, 0).reshape(-1)
+            counts_g = cnt.transpose(1, 0).reshape(-1)
+            y = registry.expert_ffn_from_rows(
+                recv.reshape(ep * spd * cap, d),
+                wg,
+                wu,
+                wd,
+                offsets_g,
+                counts_g,
+                capacity=cap,
+                groups_per_weight=ep,
+                enabled=True,
+            )
+        else:
+            bufs, pos, keep = bucket_dispatch(xt, slots, total_slots, cap)
+            # How full each outgoing bucket actually is — rides the same
+            # all_to_all so every device knows its received buckets'
+            # raggedness.
+            counts = kept_counts(slots, keep, total_slots)
+            # (total_slots, cap, d) -> exchange so each device gets its slots.
+            bufs = bufs.reshape(ep, spd, cap, d)
+            recv = jax.lax.all_to_all(
+                bufs, axis, split_axis=0, concat_axis=0, tiled=False
+            )
+            cnt = jax.lax.all_to_all(
+                counts.reshape(ep, spd), axis,
+                split_axis=0, concat_axis=0, tiled=False,
+            )
+            # recv: (ep, spd, cap, d) — axis 0 now = source rank.
+            recv = recv.transpose(1, 0, 2, 3)              # (spd, ep, cap, d)
+            cnt = cnt.transpose(1, 0)                      # (spd, ep)
+
+            # Local expert compute: bucket (slot e, source r) uses weight
+            # row e; the ragged GMM kernels skip capacity rows past each
+            # bucket's count, so FFN FLOPs track tokens actually routed
+            # (fallback: folded einsums over the same layout).
+            y = registry.expert_ffn(
+                recv.reshape(spd * ep, cap, d),
+                wg,
+                wu,
+                wd,
+                group_sizes=cnt.reshape(-1),
+                groups_per_weight=ep,
+                enabled=use_kernels,
+            )
+        y = y.reshape(spd, ep, cap, d).transpose(1, 0, 2, 3)
         back = jax.lax.all_to_all(y, axis, split_axis=0, concat_axis=0, tiled=False)
         back = back.reshape(total_slots, cap, d)
         out = bucket_combine(back, slots, pos, keep, w)

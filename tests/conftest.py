@@ -9,3 +9,12 @@ sys.path.insert(0, os.path.dirname(__file__))
 # NOTE: deliberately no xla_force_host_platform_device_count here — smoke
 # tests and benches must see the real single device. Multi-device scenarios
 # run in subprocesses (tests/test_multidevice.py) with their own XLA_FLAGS.
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: slow multidevice/property/interpret-mode tests. The fast "
+        "tier (scripts/check.sh) deselects them with -m 'not slow'; "
+        "scripts/check.sh --all (and plain pytest) runs the full matrix.",
+    )

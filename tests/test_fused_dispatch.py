@@ -1,0 +1,462 @@
+"""Fused dispatch-gather GMM path + EP capacity/placement bugfixes.
+
+Covers:
+* ``gmm_gather`` / ``gmm_dual_act_gather`` parity vs the gather oracles and
+  vs the padded ragged kernels over the same buckets (the fused prologue
+  must be a pure layout change, not a math change);
+* ``dispatch_metadata`` consistency with ``bucket_dispatch`` (same slots/
+  keep/counts; rebuilding padded buffers from the metadata reproduces the
+  scattered buffers bit-for-bit);
+* the decode ownership sentinel (``total_slots + 1``) vs the dispatch trash
+  row (``n_buckets``) off-by-one interplay — sentinels must never alias the
+  trash row, leak into counts, or reach the combine;
+* capacity **ceiling** regression: perfectly balanced routing at
+  ``capacity_factor == 1.0`` drops zero copies (floor truncation used to);
+* ``tiled_placement`` consistency: every default replica slot of expert e
+  holds expert e's weight row under the ``jnp.tile`` slot expansion
+  ``moe_ep`` uses for non-divisible ``n_rows / ep``;
+* end-to-end MoE parity (EP and ESP, prefill and decode shapes) with the
+  fused path on vs the reference paths, plus gradients through the fused
+  ``custom_vjp``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.kernels import registry
+from repro.kernels.gmm.ops import expert_ffn_gather, expert_ffn_ragged, gmm_gather_op
+from repro.kernels.gmm.ragged import gmm_dual_act_gather
+from repro.kernels.gmm.ref import (
+    expert_ffn_gather_ref,
+    gather_buckets_ref,
+    gmm_ragged_ref,
+    gmm_ref,
+)
+from repro.models.moe import moe_dense, moe_ep, moe_esp, moe_init
+from repro.parallel.collectives import (
+    bucket_capacity,
+    bucket_combine,
+    bucket_dispatch,
+    dispatch_metadata,
+    kept_counts,
+    tiled_placement,
+)
+from repro.parallel.ctx import ParallelCtx
+
+RNG = jax.random.PRNGKey(0)
+
+CTX_ON = ParallelCtx(capacity_factor=8.0, use_kernels=True)
+CTX_OFF = ParallelCtx(capacity_factor=8.0, use_kernels=False)
+
+
+def _segments(counts, pad_between=0):
+    """Random flat rows with bucket-contiguous segments; returns
+    (rows, offsets) with ``pad_between`` junk rows between segments."""
+    counts = np.asarray(counts)
+    offsets = np.zeros(len(counts), np.int32)
+    pos = 0
+    for i, c in enumerate(counts):
+        offsets[i] = pos
+        pos += int(c) + pad_between
+    return pos, jnp.asarray(offsets, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# gather kernels vs oracles and vs the padded ragged kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "g,cap,d,f,counts",
+    [
+        (4, 16, 8, 12, [3, 0, 16, 5]),          # zero group, full group
+        (3, 96, 64, 160, [1, 95, 40]),          # non-128 C/D/F
+        (2, 128, 128, 256, [128, 17]),          # MXU-native tiles
+        (5, 24, 48, 40, [24, 0, 0, 7, 2]),      # multiple empty groups
+    ],
+)
+def test_gmm_gather_matches_ref(g, cap, d, f, counts):
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 2)
+    x = jax.random.normal(ks[0], (max(r, 1), d))
+    w = jax.random.normal(ks[1], (g, d, f)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    out = gmm_gather_op(x, w, offsets, gs, capacity=cap)
+    buckets = gather_buckets_ref(x, offsets, gs, cap)
+    ref = gmm_ragged_ref(buckets, w, gs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+    # Rows past each group's count are exactly zero.
+    outn = np.asarray(out)
+    for gi, cnt in enumerate(counts):
+        assert (outn[gi, cnt:] == 0).all()
+
+
+def test_gmm_gather_noncontiguous_segments():
+    """Offsets need not tile the array: junk rows between segments (and
+    NaNs in them) must never reach the output — the prologue only gathers
+    addressed rows, dead tiles skip the DMA entirely."""
+    g, cap, d, f = 3, 16, 8, 12
+    counts = [5, 0, 9]
+    r, offsets = _segments(counts, pad_between=3)
+    ks = jax.random.split(RNG, 2)
+    x = jax.random.normal(ks[0], (r, d))
+    # Poison every row not inside a live segment.
+    live = np.zeros(r, bool)
+    for off, cnt in zip(np.asarray(offsets), counts):
+        live[off : off + cnt] = True
+    x = jnp.where(jnp.asarray(live)[:, None], x, jnp.nan)
+    w = jax.random.normal(ks[1], (g, d, f)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    out = np.asarray(gmm_gather_op(x, w, offsets, gs, capacity=cap))
+    # NaN rows CAN be touched by a partial tile over-read, but only the
+    # masked tail — kept rows must be finite and exact.
+    ref = np.asarray(
+        gmm_ragged_ref(
+            gather_buckets_ref(jnp.nan_to_num(x), offsets, gs, cap), w, gs
+        )
+    )
+    for gi, cnt in enumerate(counts):
+        assert np.isfinite(out[gi, :cnt]).all()
+        np.testing.assert_allclose(out[gi, :cnt], ref[gi, :cnt], rtol=1e-5, atol=1e-5)
+
+
+def test_gmm_gather_segment_at_array_end():
+    """The last segment's partial tile over-reads past the end of the flat
+    array — the wrapper's row padding must absorb it (regression for the
+    clamped-DMA tile shift)."""
+    g, cap, d, f = 2, 128, 16, 24
+    counts = [100, 129 - 100]  # second segment ends exactly at R
+    r, offsets = _segments(counts)
+    assert r == 129  # deliberately not a multiple of any tile size
+    ks = jax.random.split(RNG, 2)
+    x = jax.random.normal(ks[0], (r, d))
+    w = jax.random.normal(ks[1], (g, d, f)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    out = gmm_gather_op(x, w, offsets, gs, capacity=cap)
+    ref = gmm_ragged_ref(gather_buckets_ref(x, offsets, gs, cap), w, gs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("gpw", [2, 3])
+def test_gmm_gather_groups_per_weight(gpw):
+    gw, cap, d, f = 2, 16, 24, 20
+    g = gw * gpw
+    counts = [(3 * i) % (cap + 1) for i in range(g)]
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 2)
+    x = jax.random.normal(ks[0], (r, d))
+    w = jax.random.normal(ks[1], (gw, d, f)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    out = gmm_gather_op(x, w, offsets, gs, capacity=cap, groups_per_weight=gpw)
+    buckets = gather_buckets_ref(x, offsets, gs, cap)
+    ref = gmm_ragged_ref(buckets, w, gs, groups_per_weight=gpw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_dual_act_gather_matches_ref():
+    g, cap, d, f = 4, 32, 16, 24
+    counts = [0, 32, 5, 19]
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 3)
+    x = jax.random.normal(ks[0], (r, d))
+    wg = jax.random.normal(ks[1], (g, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (g, d, f)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    out = gmm_dual_act_gather(x, wg, wu, offsets, gs, capacity=cap, interpret=True)
+    buckets = gather_buckets_ref(x, offsets, gs, cap)
+    mask = (jnp.arange(cap)[None, :] < gs[:, None])[..., None]
+    ref = (jax.nn.silu(gmm_ref(buckets, wg)) * gmm_ref(buckets, wu)) * mask
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_expert_ffn_gather_matches_padded_ragged_and_einsum():
+    """The fused path must agree with BOTH the padded ragged kernel over the
+    materialized buckets AND the pure einsum reference."""
+    gw, gpw, cap, d, f = 2, 2, 16, 8, 12
+    g = gw * gpw
+    counts = [7, 0, 16, 2]
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 4)
+    x = jax.random.normal(ks[0], (r, d))
+    wg = jax.random.normal(ks[1], (gw, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (gw, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (gw, f, d)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    fused = expert_ffn_gather(
+        x, wg, wu, wd, offsets, gs, capacity=cap, groups_per_weight=gpw
+    )
+    buckets = gather_buckets_ref(x, offsets, gs, cap)
+    padded = expert_ffn_ragged(buckets, wg, wu, wd, gs, groups_per_weight=gpw)
+    einsum = expert_ffn_gather_ref(x, wg, wu, wd, offsets, gs, cap, gpw)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(padded), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(einsum), rtol=1e-5, atol=1e-5)
+
+
+def test_expert_ffn_from_rows_grad_matches_ref():
+    """Kernel forward + reference backward (custom_vjp) through the fused
+    gather — gradients must flow back onto the flat rows and the weights."""
+    g, cap, d, f = 3, 16, 8, 12
+    counts = [4, 16, 0]
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 4)
+    x = jax.random.normal(ks[0], (r, d))
+    wg = jax.random.normal(ks[1], (g, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (g, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (g, f, d)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+
+    def loss(fn, x, wg, wu, wd):
+        return (fn(x, wg, wu, wd) ** 2).sum()
+
+    kern = lambda *a: registry.expert_ffn_from_rows(
+        *a, offsets, gs, capacity=cap, enabled=True
+    )
+    ref = lambda *a: expert_ffn_gather_ref(*a, offsets, gs, cap)
+    gk = jax.grad(loss, argnums=(1, 2, 3, 4))(kern, x, wg, wu, wd)
+    gr = jax.grad(loss, argnums=(1, 2, 3, 4))(ref, x, wg, wu, wd)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dispatch_metadata vs bucket_dispatch
+# ---------------------------------------------------------------------------
+
+def test_dispatch_metadata_matches_bucket_dispatch():
+    n, k, buckets, cap = 20, 2, 6, 5
+    ks = jax.random.split(RNG, 2)
+    x = jax.random.normal(ks[0], (n, 8))
+    ids = jax.random.randint(ks[1], (n, k), 0, buckets)
+    bufs, slots_b, keep_b = bucket_dispatch(x, ids, buckets, cap)
+    row_ids, offsets, counts, slots_m, keep_m = dispatch_metadata(ids, buckets, cap)
+    np.testing.assert_array_equal(np.asarray(slots_b), np.asarray(slots_m))
+    np.testing.assert_array_equal(np.asarray(keep_b), np.asarray(keep_m))
+    np.testing.assert_array_equal(
+        np.asarray(counts), np.asarray(kept_counts(ids, keep_b, buckets))
+    )
+    # Rebuilding the padded buffers from the compacted metadata reproduces
+    # the scattered buffers exactly (same rows, same positions).
+    rows = x[row_ids]
+    rebuilt = np.asarray(gather_buckets_ref(rows, offsets, counts, cap))
+    np.testing.assert_array_equal(rebuilt, np.asarray(bufs))
+
+
+def test_dispatch_metadata_compacted_order_is_deterministic():
+    """Within a bucket, earlier tokens come first in the compacted order —
+    the same 'earlier tokens win' rule bucket_dispatch packs with."""
+    ids = jnp.asarray([[1], [0], [1], [0], [1]], jnp.int32)
+    row_ids, offsets, counts, _, _ = dispatch_metadata(ids, 2, 8)
+    np.testing.assert_array_equal(np.asarray(counts), [2, 3])
+    np.testing.assert_array_equal(np.asarray(offsets), [0, 2])
+    np.testing.assert_array_equal(np.asarray(row_ids), [1, 3, 0, 2, 4])
+
+
+# ---------------------------------------------------------------------------
+# decode ownership sentinel vs trash row (off-by-one pin)
+# ---------------------------------------------------------------------------
+
+def test_decode_sentinel_never_aliases_trash_row():
+    """The decode path marks unowned copies with ``total_slots + 1`` while
+    ``bucket_dispatch`` keeps one sacrificial row at index ``n_buckets``
+    and drops on ``flat_b < n_buckets``. Pin the interplay: the sentinel
+    (and the trash index itself) must never land in a real bucket, never
+    count toward kept_counts / metadata counts, and never reach combine."""
+    n, k, buckets, cap = 8, 2, 4, 4
+    ks = jax.random.split(RNG, 2)
+    x = jax.random.normal(ks[0], (n, 8))
+    base = jax.random.randint(ks[1], (n, k), 0, buckets)
+    owned = (jnp.arange(n) % 2) == 0
+    for sentinel in (buckets, buckets + 1):  # trash row itself + decode value
+        ids = jnp.where(owned[:, None], base, sentinel)
+        bufs, slots, keep = bucket_dispatch(x, ids, buckets, cap)
+        # Unowned copies are dropped, owned copies under capacity kept.
+        assert not bool(keep[~owned].any()), sentinel
+        # Buffers only ever contain owned-token rows.
+        ref_bufs, _, _ = bucket_dispatch(
+            jnp.where(owned[:, None], x, 0.0), jnp.where(owned[:, None], base, sentinel),
+            buckets, cap,
+        )
+        np.testing.assert_array_equal(np.asarray(bufs), np.asarray(ref_bufs))
+        # Counts (both implementations) see only owned copies.
+        counts_kept = kept_counts(ids, keep, buckets)
+        _, _, counts_meta, _, keep_m = dispatch_metadata(ids, buckets, cap)
+        owned_ids = base[owned]
+        expect = np.minimum(
+            np.bincount(np.asarray(owned_ids).reshape(-1), minlength=buckets), cap
+        )
+        np.testing.assert_array_equal(np.asarray(counts_kept), expect)
+        np.testing.assert_array_equal(np.asarray(counts_meta), expect)
+        np.testing.assert_array_equal(np.asarray(keep), np.asarray(keep_m))
+        # Combine: sentinel copies contribute exactly zero.
+        out = bucket_combine(bufs, ids, slots, keep, jnp.ones((n, k)))
+        assert bool(jnp.all(out[~owned] == 0.0)), sentinel
+
+
+# ---------------------------------------------------------------------------
+# capacity ceiling regression
+# ---------------------------------------------------------------------------
+
+def test_bucket_capacity_uses_ceiling():
+    # 100 copies over 3 buckets at factor 1.0: floor(33.3) = 33 dropped a
+    # copy of a perfectly balanced batch; ceiling allocates 34.
+    assert bucket_capacity(50, 2, 1.0, 3) == 34
+    assert bucket_capacity(64, 2, 1.0, 4) == 32   # exact division unchanged
+    assert bucket_capacity(2, 2, 1.0, 4) == 8     # floor-of-8 keeps smoke shapes
+
+
+@pytest.mark.parametrize("n_tok,k,buckets", [(50, 2, 3), (33, 1, 5), (100, 2, 7)])
+def test_balanced_routing_drops_nothing_at_capacity_one(n_tok, k, buckets):
+    """Perfectly balanced routing at capacity_factor == 1.0 must drop zero
+    token copies (regression: floor truncation under-allocated)."""
+    cap = bucket_capacity(n_tok, k, 1.0, buckets)
+    ids = (jnp.arange(n_tok * k) % buckets).reshape(n_tok, k)
+    x = jax.random.normal(RNG, (n_tok, 4))
+    _, _, keep = bucket_dispatch(x, ids, buckets, cap)
+    assert bool(keep.all())
+    _, _, counts, _, keep_m = dispatch_metadata(ids, buckets, cap)
+    assert bool(keep_m.all())
+    assert int(counts.sum()) == n_tok * k
+
+
+# ---------------------------------------------------------------------------
+# tiled placement consistency (non-divisible n_rows / ep)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,ep", [(6, 4), (3, 2), (5, 3), (7, 4)])
+def test_tiled_placement_consistent_with_tiling(e, ep):
+    """Every replica slot the default placement hands out must hold its
+    expert's weight row under the ``jnp.tile`` expansion (slot s = row
+    s % n_rows), and every physical slot must carry traffic."""
+    n_rows = e
+    spd = -(-n_rows // ep)
+    n_slots = ep * spd
+    slot_of, n_replicas = tiled_placement(e, n_rows, n_slots)
+    slot_of, n_replicas = np.asarray(slot_of), np.asarray(n_replicas)
+    covered = set()
+    for eid in range(e):
+        assert n_replicas[eid] >= 1
+        for r in range(n_replicas[eid]):
+            s = slot_of[eid, r]
+            assert 0 <= s < n_slots
+            assert s % n_rows == eid, (eid, r, s)
+            covered.add(int(s))
+        # Padding replica columns stay on valid slots for this expert too
+        # (choose_slots never reads them, but a stale table must not alias).
+        for r in range(n_replicas[eid], slot_of.shape[1]):
+            assert slot_of[eid, r] % n_rows == eid
+    assert covered == set(range(n_slots)), "idle shadow slots"
+
+
+def test_tiled_placement_grows_replica_table():
+    """More than r_max wrap-arounds (n_slots > 4 * n_rows) must widen the
+    replica table, not truncate it — truncation would leave live tiled
+    slots idle while they still inflate the capacity denominator."""
+    n_experts = n_rows = 2
+    n_slots = 10  # expert 0 -> slots {0,2,4,6,8}: 5 replicas > default 4
+    slot_of, n_replicas = tiled_placement(n_experts, n_rows, n_slots)
+    slot_of, n_replicas = np.asarray(slot_of), np.asarray(n_replicas)
+    covered = set()
+    for eid in range(n_experts):
+        assert n_replicas[eid] == 5
+        for r in range(n_replicas[eid]):
+            assert slot_of[eid, r] % n_rows == eid
+            covered.add(int(slot_of[eid, r]))
+    assert covered == set(range(n_slots)), "idle shadow slots"
+
+
+def test_moe_ep_rejects_underprovisioned_slots():
+    """Fewer physical slots than weight rows would silently drop experts —
+    moe_ep must refuse with a clear error, not truncate."""
+    from repro.launch.mesh import make_mesh_compat
+
+    cfg = dataclasses.replace(
+        smoke(get_config("dbrx-132b")), n_experts=3, experts_per_token=2
+    )
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    rng = jax.random.PRNGKey(0)
+    p = moe_init(rng, cfg)
+    x = jax.random.normal(rng, (2, 8, cfg.d_model)) * 0.5
+    ctx = ParallelCtx(mesh=mesh, capacity_factor=8.0, use_kernels=False)
+    with mesh, pytest.raises(ValueError, match="physical"):
+        moe_ep(p, x, cfg, ctx, slots_per_device=2)
+
+
+def test_moe_ep_non_divisible_rows_single_device(monkeypatch):
+    """moe_ep with n_rows % ep != 0 on a 1-device mesh: force the tiled
+    branch by passing slots_per_device explicitly, then check parity with
+    the dense oracle (tokens must land on slots holding their expert)."""
+    from repro.launch.mesh import make_mesh_compat
+
+    cfg = dataclasses.replace(
+        smoke(get_config("dbrx-132b")), n_experts=3, experts_per_token=2
+    )
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    rng = jax.random.PRNGKey(0)
+    p = moe_init(rng, cfg)
+    x = jax.random.normal(rng, (2, 8, cfg.d_model)) * 0.5
+    dense, _ = moe_dense(p, x, cfg, CTX_OFF)
+    for uk in (False, True):
+        ctx = ParallelCtx(mesh=mesh, capacity_factor=8.0, use_kernels=uk)
+        with mesh:
+            # slots_per_device=4 > n_rows=3: wrap-around shadow slots live.
+            out, _ = jax.jit(
+                lambda p_, x_: moe_ep(p_, x_, cfg, ctx, slots_per_device=4)
+            )(p, x)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(dense), rtol=1e-5, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# end-to-end MoE parity through the fused path (prefill + decode shapes)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def moe_cfg():
+    return dataclasses.replace(
+        smoke(get_config("dbrx-132b")), n_experts=4, experts_per_token=2
+    )
+
+
+@pytest.mark.parametrize("shape", [(2, 8), (4, 1)], ids=["prefill", "decode"])
+def test_moe_esp_fused_parity(moe_cfg, shape):
+    b, s = shape
+    rng = jax.random.PRNGKey(0)
+    p = moe_init(rng, moe_cfg)
+    x = jax.random.normal(rng, (b, s, moe_cfg.d_model)) * 0.5
+    off, _ = moe_esp(p, x, moe_cfg, CTX_OFF)
+    on, _ = moe_esp(p, x, moe_cfg, CTX_ON)   # mesh=None + kernels -> fused
+    np.testing.assert_allclose(np.asarray(on), np.asarray(off), rtol=1e-5, atol=1e-5)
+    dense, _ = moe_dense(p, x, moe_cfg, CTX_OFF)
+    np.testing.assert_allclose(np.asarray(on), np.asarray(dense), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(2, 8), (2, 1)], ids=["prefill", "decode"])
+def test_moe_ep_fused_parity(moe_cfg, shape):
+    """EP dispatch on a 1x1 mesh with kernels on takes the fused
+    rank-compacted all_to_all path (interpret mode on CPU)."""
+    from repro.launch.mesh import make_mesh_compat
+
+    b, s = shape
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    rng = jax.random.PRNGKey(0)
+    p = moe_init(rng, moe_cfg)
+    x = jax.random.normal(rng, (b, s, moe_cfg.d_model)) * 0.5
+    outs = {}
+    for name, uk in (("off", False), ("on", True)):
+        ctx = ParallelCtx(mesh=mesh, capacity_factor=8.0, use_kernels=uk)
+        with mesh:
+            outs[name], _ = jax.jit(
+                lambda p_, x_, c_=ctx: moe_ep(p_, x_, moe_cfg, c_)
+            )(p, x)
+    np.testing.assert_allclose(
+        np.asarray(outs["on"]), np.asarray(outs["off"]), rtol=1e-5, atol=1e-5
+    )
+    dense, _ = moe_dense(p, x, moe_cfg, CTX_OFF)
+    np.testing.assert_allclose(
+        np.asarray(outs["on"]), np.asarray(dense), rtol=1e-5, atol=1e-5
+    )

@@ -64,6 +64,7 @@ def test_router_normalized(moe_cfg):
     assert float(aux) >= 1.0 - 1e-5  # aux loss lower bound at perfect balance
 
 
+@pytest.mark.slow
 @given(
     n=st.integers(1, 40),
     k=st.integers(1, 4),

@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess + forced-device tests: full tier only
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -58,6 +60,44 @@ def test_ep_esp_decode_parity_8dev():
         """
     )
     assert "PARITY_OK" in out
+
+
+def test_ep_fused_dispatch_parity_8dev():
+    """Fused rank-compacted dispatch (kernels on, interpret mode) across a
+    real 4-way all_to_all: prefill + decode (ownership sentinel) + a
+    non-divisible expert count (tiled shadow slots), all vs the dense
+    oracle."""
+    out = _run(
+        """
+        import jax, jax.numpy as jnp, dataclasses
+        from repro.configs import get_config, smoke
+        from repro.models.moe import moe_dense, moe_ep, moe_init
+        from repro.parallel.ctx import ParallelCtx
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
+        ctx = ParallelCtx(mesh=mesh, capacity_factor=8.0, use_kernels=True)
+        ref_ctx = ParallelCtx(capacity_factor=8.0, use_kernels=False)
+        rng = jax.random.PRNGKey(0)
+        for n_exp in (4, 6):  # 6 % ep(4) != 0 -> tiled shadow slots
+            cfg = dataclasses.replace(smoke(get_config("dbrx-132b")),
+                                      n_experts=n_exp, experts_per_token=2)
+            p = moe_init(rng, cfg)
+            x = jax.random.normal(rng, (4, 8, cfg.d_model)) * 0.5
+            ref, _ = moe_dense(p, x, cfg, ref_ctx)
+            with mesh:
+                ep, _ = jax.jit(lambda p, x: moe_ep(p, x, cfg, ctx))(p, x)
+            err = float(jnp.max(jnp.abs(ep - ref)))
+            assert err < 1e-5, ("prefill", n_exp, err)
+            xd = jax.random.normal(rng, (8, 1, cfg.d_model)) * 0.5
+            refd, _ = moe_dense(p, xd, cfg, ref_ctx)
+            with mesh:
+                epd, _ = jax.jit(lambda p, x: moe_ep(p, x, cfg, ctx))(p, xd)
+            err = float(jnp.max(jnp.abs(epd - refd)))
+            assert err < 1e-5, ("decode", n_exp, err)
+        print("FUSED_OK")
+        """
+    )
+    assert "FUSED_OK" in out
 
 
 def test_ep_gradient_parity_8dev():

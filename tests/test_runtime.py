@@ -63,6 +63,7 @@ def test_loss_decreases_short_training():
     assert losses[-1] < losses[0]
 
 
+@pytest.mark.slow
 def test_grad_accumulation_equivalence():
     """2 microbatches of B == 1 batch of 2B (up to clip/numerics)."""
     cfg = smoke(get_config("llama3.2-1b"))

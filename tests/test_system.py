@@ -4,6 +4,7 @@ identical continuation; then serve the trained model."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config, smoke
 from repro.models import transformer as T
@@ -44,6 +45,7 @@ def test_train_crash_restore_identical(tmp_path):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_serve_after_training(tmp_path):
     """Train briefly, then serve: batched greedy generation is deterministic
     and produces in-vocab tokens."""

@@ -1,5 +1,5 @@
-"""Kernel-path benchmark: dispatch + expert-FFN, einsum vs padded vs ragged
-vs fused-gather.
+"""Kernel-path benchmark: dispatch + expert-FFN (einsum vs padded vs ragged
+vs fused-gather), plus dense-vs-paged decode attention KV-byte accounting.
 
 Each shape cell drives the full MoE expert hot path *including token
 dispatch* (that's the HBM round-trip the fused path exists to remove):
@@ -34,9 +34,10 @@ Usage::
     PYTHONPATH=src python benchmarks/bench_kernels.py [--out BENCH_kernels.json]
     PYTHONPATH=src python benchmarks/bench_kernels.py --smoke   # CI gate
 
-``--smoke`` runs one tiny cell with 2 iterations (interpret mode on CPU)
-and exits non-zero on any parity failure — a kernel-dispatch regression
-fails the gate even when the full parity suite isn't run.
+``--smoke`` runs one tiny FFN cell + one tiny decode cell with 2
+iterations (interpret mode on CPU) and exits non-zero on any parity
+failure — a kernel-dispatch or paged-decode regression fails the gate
+even when the full parity suite isn't run.
 
 On CPU the Pallas paths execute in interpret mode (kernel *semantics*, not
 kernel speed) — wall-clock comparisons are only meaningful on TPU, and the
@@ -58,6 +59,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.flash_decode.ops import flash_decode_op, flash_decode_paged_op
+from repro.kernels.flash_decode.ref import decode_ref
 from repro.kernels.gmm.gmm import gmm, gmm_dual_act
 from repro.kernels.gmm.ops import expert_ffn_gather, expert_ffn_ragged
 from repro.kernels.gmm.ref import expert_ffn_ref
@@ -76,6 +79,18 @@ SHAPES = [
 SMOKE_SHAPES = [("smoke_4x16", 4, 16, 16, 32, False)]
 
 BM = 128  # row-tile the ragged kernels mask at (see kernels/gmm/ragged.py)
+
+# Decode cells: (name, B, max_seq, lengths, K, H, hd, page_size). Dense
+# flash-decode streams the whole (B, max_seq) cache and masks; paged decode
+# walks only each request's live pages — `kv_hbm_mb` is the bandwidth story.
+DECODE_SHAPES = [
+    # hd/page multiples of 128 so the cells stay compiled-eligible on TPU
+    # (can_flash_decode / can_flash_decode_paged gates).
+    ("decode_short_balanced", 4, 1024, [256, 256, 256, 256], 2, 8, 128, 128),
+    ("decode_long_balanced", 4, 1024, [1024, 1024, 1024, 1024], 2, 8, 128, 128),
+    ("decode_ragged", 4, 2048, [128, 256, 512, 1024], 2, 8, 128, 128),
+]
+DECODE_SMOKE_SHAPES = [("decode_smoke", 2, 64, [20, 48], 2, 4, 16, 16)]
 
 
 def _skewed_counts(g: int, c: int, seed: int) -> np.ndarray:
@@ -211,6 +226,78 @@ def run(iters: int = 20, smoke: bool = False) -> list[dict]:
     return rows
 
 
+def run_decode(iters: int = 20, smoke: bool = False) -> list[dict]:
+    """Dense vs paged decode attention: parity + KV HBM-byte accounting.
+
+    Bytes model (fp32, k + v): dense reads ``B * max_seq`` cache rows per
+    step regardless of context; paged reads ``sum_b ceil(len_b / page) *
+    page`` rows (the dead-block clamp elides everything past each request's
+    live pages). Wall-clock is interpret-mode semantics off-TPU.
+    """
+    interpret = default_interpret()
+    rows = []
+    for name, b, max_seq, lengths, kv, h, hd, bs in (
+        DECODE_SMOKE_SHAPES if smoke else DECODE_SHAPES
+    ):
+        ks = jax.random.split(jax.random.PRNGKey(zlib.crc32(name.encode())), 3)
+        nb = -(-max_seq // bs)
+        q = jax.random.normal(ks[0], (b, h, hd))
+        k = jax.random.normal(ks[1], (b, nb * bs, kv, hd))
+        v = jax.random.normal(ks[2], (b, nb * bs, kv, hd))
+        ln = jnp.asarray(lengths, jnp.int32)
+        valid = (jnp.arange(nb * bs)[None, :] < ln[:, None]).astype(jnp.int32)
+        pool_k = k.reshape(b * nb, bs, kv, hd)
+        pool_v = v.reshape(b * nb, bs, kv, hd)
+        tables = jnp.arange(b * nb, dtype=jnp.int32).reshape(b, nb)
+
+        dense_fn = lambda q, k, v, m: flash_decode_op(q, k, v, m, interpret=interpret)
+        paged_fn = lambda q, pk, pv, t, l: flash_decode_paged_op(
+            q, pk, pv, t, l, interpret=interpret
+        )
+
+        ref = np.asarray(decode_ref(q, k, v, valid))
+        np.testing.assert_allclose(
+            np.asarray(dense_fn(q, k, v, valid)), ref,
+            rtol=2e-4, atol=2e-4, err_msg=f"{name}:dense parity",
+        )
+        np.testing.assert_allclose(
+            np.asarray(paged_fn(q, pool_k, pool_v, tables, ln)), ref,
+            rtol=2e-4, atol=2e-4, err_msg=f"{name}:paged parity",
+        )
+
+        row_bytes = 2 * kv * hd * np.dtype(np.float32).itemsize  # k + v
+        dense_mb = b * nb * bs * row_bytes / 1e6
+        live_pages = sum(-(-l // bs) for l in lengths)
+        paged_mb = live_pages * bs * row_bytes / 1e6
+
+        t_d = _time(dense_fn, q, k, v, valid, iters=iters)
+        t_p = _time(paged_fn, q, pool_k, pool_v, tables, ln, iters=iters)
+        rows.append(
+            {
+                "shape": name,
+                "B": b,
+                "max_seq": max_seq,
+                "page_size": bs,
+                "lengths": list(lengths),
+                "tokens_live": int(sum(lengths)),
+                "tokens_streamed_dense": b * nb * bs,
+                "tokens_streamed_paged": live_pages * bs,
+                "paths": {
+                    "flash_decode_dense_masked": {
+                        "wall_ms": round(t_d * 1e3, 3),
+                        "kv_hbm_mb": round(dense_mb, 4),
+                    },
+                    "flash_decode_paged": {
+                        "wall_ms": round(t_p * 1e3, 3),
+                        "kv_hbm_mb": round(paged_mb, 4),
+                    },
+                },
+                "kv_bytes_ratio_dense_over_paged": round(dense_mb / paged_mb, 3),
+            }
+        )
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_kernels.json")
@@ -218,13 +305,14 @@ def main() -> None:
     ap.add_argument(
         "--smoke",
         action="store_true",
-        help="one tiny shape, 2 iters: fast kernel-dispatch regression gate",
+        help="tiny FFN + decode cells, 2 iters: fast kernel regression gate",
     )
     args = ap.parse_args()
 
     iters = 2 if args.smoke else args.iters
     try:
         rows = run(iters=iters, smoke=args.smoke)
+        decode_rows = run_decode(iters=iters, smoke=args.smoke)
     except AssertionError as e:  # parity failure must fail the gate loudly
         print(f"KERNEL PARITY FAILURE: {e}", file=sys.stderr)
         raise SystemExit(1)
@@ -244,9 +332,13 @@ def main() -> None:
             "This bench drives the local/ESP-style dispatch; the EP "
             "all_to_all path keeps a statically-sized exchange buffer "
             "(equal splits), where the fusion instead removes the "
-            "receive-side repack + padded FFN input."
+            "receive-side repack + padded FFN input. decode_shapes compare "
+            "dense masked flash-decode (streams B*max_seq KV rows/step) "
+            "against the paged block-table kernel (streams only live "
+            "pages): kv_hbm_mb tracks context length, not max_seq."
         ),
         "shapes": rows,
+        "decode_shapes": decode_rows,
     }
     if args.smoke:
         print(json.dumps(doc, indent=2))

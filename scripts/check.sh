@@ -59,6 +59,32 @@ np.testing.assert_allclose(
 valid = (jnp.arange(32)[None, :] < 20).astype(jnp.int32)
 out = decode_attend(q[:, 0], k, v, valid)
 assert np.isfinite(np.asarray(out)).all()
+
+# paged decode: block-table walk over a shared page pool must match the
+# dense masked path (same lengths, identity table)
+from repro.kernels.registry import decode_attend_paged
+from repro.kernels.flash_decode.ref import decode_ref
+bs = 8
+pool_k = k.reshape(4, bs, 2, 16)
+pool_v = v.reshape(4, bs, 2, 16)
+tables = jnp.arange(4, dtype=jnp.int32).reshape(1, 4)
+lengths = jnp.asarray([20], jnp.int32)
+np.testing.assert_allclose(
+    np.asarray(decode_attend_paged(q[:, 0], pool_k, pool_v, tables, lengths)),
+    np.asarray(decode_ref(q[:, 0], k, v, valid)),
+    rtol=2e-5, atol=2e-5)
+
+# flash-decode partials over two disjoint halves LSE-merge to the full path
+from repro.kernels.registry import decode_attend_partials
+a1, m1, l1 = decode_attend_partials(q[:, 0], k[:, :16], v[:, :16], valid[:, :16])
+a2, m2, l2 = decode_attend_partials(q[:, 0], k[:, 16:], v[:, 16:], valid[:, 16:])
+mm = jnp.maximum(m1, m2)
+num = a1 * jnp.exp(m1 - mm)[..., None] + a2 * jnp.exp(m2 - mm)[..., None]
+den = l1 * jnp.exp(m1 - mm) + l2 * jnp.exp(m2 - mm)
+np.testing.assert_allclose(
+    np.asarray(num / jnp.maximum(den, 1e-30)[..., None]),
+    np.asarray(decode_ref(q[:, 0], k, v, valid)),
+    rtol=2e-5, atol=2e-5)
 print("kernel smoke OK")
 EOF
 

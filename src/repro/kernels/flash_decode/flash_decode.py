@@ -7,6 +7,18 @@ axis sequential, online softmax in VMEM scratch, and — the GQA trick — all
 panel, turning the per-block score computation into an MXU (G x hd) @
 (hd x bt) matmul instead of G vector passes. Cache-slot validity arrives
 as an int32 mask (ring buffers / partially filled caches).
+
+``return_partials=True`` skips the local normalization and emits the raw
+online-softmax state ``(acc, m, l)`` instead — ``acc`` is the
+*unnormalized* weighted value sum in fp32, ``m`` the running row max and
+``l`` the running exp-sum. Two partials over disjoint key sets merge
+exactly (the standard LSE merge)::
+
+    m* = max(m1, m2);  l* = l1*e^(m1-m*) + l2*e^(m2-m*)
+    acc* = acc1*e^(m1-m*) + acc2*e^(m2-m*);   out = acc* / l*
+
+which is what the sequence-parallel decode path psums across shards
+(`repro.parallel.collectives.seq_parallel_decode_attend`).
 """
 
 from __future__ import annotations
@@ -21,7 +33,57 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(q_ref, k_ref, v_ref, m_in_ref, o_ref, m_ref, l_ref, acc_ref, *, nt: int):
+def write_outputs(partials: bool, out_refs, m_ref, l_ref, acc_ref):
+    """Final-block epilogue shared by the dense and paged decode kernels:
+    either locally normalize, or emit the raw ``(acc, m, l)`` state (``l``
+    broadcast across the 128-lane tile; column 0 is the value)."""
+    if partials:
+        o_ref, mo_ref, lo_ref = out_refs
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+        mo_ref[0, 0] = m_ref[...].astype(mo_ref.dtype)
+        lo_ref[0, 0] = jnp.broadcast_to(
+            l_ref[:, :1], lo_ref.shape[2:]
+        ).astype(lo_ref.dtype)
+    else:
+        (o_ref,) = out_refs
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def output_layout(partials: bool, b, nkv, g, hd, dtype, index_map):
+    """(out_shape, out_specs) shared by the decode wrappers. Partials ride
+    out as fp32 ``acc (…, g, hd)`` plus ``m``/``l`` through ``(…, g, 128)``
+    lanes (min lane tile; the broadcast is free in VMEM)."""
+    o_spec = pl.BlockSpec((1, 1, g, hd), index_map)
+    if not partials:
+        return jax.ShapeDtypeStruct((b, nkv, g, hd), dtype), o_spec
+    ml_shape = jax.ShapeDtypeStruct((b, nkv, g, 128), jnp.float32)
+    ml_spec = pl.BlockSpec((1, 1, g, 128), index_map)
+    return (
+        (jax.ShapeDtypeStruct((b, nkv, g, hd), jnp.float32), ml_shape, ml_shape),
+        (o_spec, ml_spec, ml_spec),
+    )
+
+
+def unpack_outputs(partials: bool, out, b, nh, hd):
+    """Reshape kernel outputs to the public ``(B, H, …)`` contract."""
+    if not partials:
+        return out.reshape(b, nh, hd)
+    acc, m, l = out
+    return (
+        acc.reshape(b, nh, hd),
+        m[..., 0].reshape(b, nh),
+        l[..., 0].reshape(b, nh),
+    )
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, m_in_ref, *refs, nt: int, partials: bool):
+    if partials:
+        o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref = refs
+        out_refs = (o_ref, mo_ref, lo_ref)
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
+        out_refs = (o_ref,)
     jt = pl.program_id(2)
 
     @pl.when(jt == 0)
@@ -52,8 +114,7 @@ def _decode_kernel(q_ref, k_ref, v_ref, m_in_ref, o_ref, m_ref, l_ref, acc_ref, 
 
     @pl.when(jt == nt - 1)
     def _():
-        l = jnp.maximum(l_ref[:, :1], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        write_outputs(partials, out_refs, m_ref, l_ref, acc_ref)
 
 
 def flash_decode(
@@ -63,8 +124,12 @@ def flash_decode(
     valid: jax.Array,   # (B, T) int32
     *,
     bt: int = 512,
+    return_partials: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
+    """Locally-normalized output ``(B, H, hd)``, or — with
+    ``return_partials`` — the fp32 triple ``(acc, m, l)`` of shapes
+    ``(B, H, hd)``, ``(B, H)``, ``(B, H)`` for a cross-shard LSE merge."""
     b, nh, hd = q.shape
     t, nkv = k.shape[1], k.shape[2]
     g = nh // nkv
@@ -79,8 +144,12 @@ def flash_decode(
     nt = t // bt
     qg = q.reshape(b, nkv, g, hd)
     grid = (b, nkv, nt)
+    out_shape, out_specs = output_layout(
+        return_partials, b, nkv, g, hd, q.dtype,
+        lambda bi, kh, jt: (bi, kh, 0, 0),
+    )
     out = pl.pallas_call(
-        functools.partial(_decode_kernel, nt=nt),
+        functools.partial(_decode_kernel, nt=nt, partials=return_partials),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, g, hd), lambda bi, kh, jt: (bi, kh, 0, 0)),
@@ -88,8 +157,8 @@ def flash_decode(
             pl.BlockSpec((1, bt, 1, hd), lambda bi, kh, jt: (bi, jt, kh, 0)),
             pl.BlockSpec((1, bt), lambda bi, kh, jt: (bi, jt)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bi, kh, jt: (bi, kh, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, nkv, g, hd), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((g, 128), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
@@ -97,4 +166,24 @@ def flash_decode(
         ],
         interpret=interpret,
     )(qg, k, v, valid.astype(jnp.int32))
-    return out.reshape(b, nh, hd)
+    return unpack_outputs(return_partials, out, b, nh, hd)
+
+
+def merge_partials(acc, m, l, axis_name: str):
+    """LSE-merge flash-decode partials across a named mesh axis.
+
+    ``acc (B, H, hd)``, ``m (B, H)``, ``l (B, H)`` — each shard's state over
+    its disjoint KV slice. A fully-masked shard carries ``m = NEG_INF`` but
+    *non-zero* ``l``/``acc`` (the online softmax computes ``exp(s - m)`` with
+    both at ``NEG_INF``, so masked rows contribute ``exp(0) = 1`` until a
+    live key raises ``m``); it still contributes nothing here because its
+    weight ``exp(m - m_max)`` underflows to exactly 0 whenever *any* shard
+    saw a live key. If every shard is fully masked the merge degenerates to
+    the same uniform average over cache rows the dense masked softmax
+    produces — callers must not treat ``l`` as a liveness signal.
+    """
+    m_max = jax.lax.pmax(m, axis_name)
+    scale = jnp.exp(m - m_max)
+    num = jax.lax.psum(acc * scale[..., None], axis_name)
+    den = jax.lax.psum(l * scale, axis_name)
+    return num / jnp.maximum(den, 1e-30)[..., None]

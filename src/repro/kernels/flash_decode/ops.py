@@ -1,4 +1,4 @@
-"""Jit'd wrapper for flash decode."""
+"""Jit'd wrappers for flash decode (dense, partials, paged)."""
 
 from __future__ import annotations
 
@@ -7,6 +7,7 @@ import functools
 import jax
 
 from repro.kernels.flash_decode.flash_decode import flash_decode
+from repro.kernels.flash_decode.paged import flash_decode_paged
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -14,3 +15,23 @@ def flash_decode_op(q, k, v, valid, interpret: bool | None = None):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return flash_decode(q, k, v, valid, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_partials_op(q, k, v, valid, interpret: bool | None = None):
+    """fp32 ``(acc, m, l)`` online-softmax state over the (masked) cache —
+    the cross-shard LSE-merge operand (see ``merge_partials``)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_decode(q, k, v, valid, return_partials=True, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_paged_op(
+    q, pool_k, pool_v, block_tables, lengths, interpret: bool | None = None
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_decode_paged(
+        q, pool_k, pool_v, block_tables, lengths, interpret=interpret
+    )

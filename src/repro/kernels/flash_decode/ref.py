@@ -22,3 +22,32 @@ def decode_ref(
     p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     o = jnp.einsum("bkgt,btkd->bkgd", p, v)
     return o.reshape(b, nh, hd)
+
+
+def gather_pages(
+    pool: jax.Array,          # (P, bs, K, hd) shared page pool
+    block_tables: jax.Array,  # (B, NB) int32
+) -> jax.Array:
+    """Materialize each request's logical KV view from the pool: (B, NB*bs,
+    K, hd). Reference-path helper (the kernel never builds this)."""
+    b, nb = block_tables.shape
+    _, bs, nkv, hd = pool.shape
+    return jnp.take(pool, block_tables.reshape(-1), axis=0).reshape(
+        b, nb * bs, nkv, hd
+    )
+
+
+def paged_decode_ref(
+    q: jax.Array,             # (B, H, hd)
+    pool_k: jax.Array,        # (P, bs, K, hd)
+    pool_v: jax.Array,        # (P, bs, K, hd)
+    block_tables: jax.Array,  # (B, NB) int32
+    lengths: jax.Array,       # (B,) int32 — live context per request
+) -> jax.Array:
+    """Oracle for ``flash_decode_paged``: gather pages densely, mask the
+    prefix ``lengths``, run the dense decode reference."""
+    k = gather_pages(pool_k, block_tables)
+    v = gather_pages(pool_v, block_tables)
+    t = k.shape[1]
+    valid = (jnp.arange(t)[None, :] < lengths[:, None]).astype(jnp.int32)
+    return decode_ref(q, k, v, valid)

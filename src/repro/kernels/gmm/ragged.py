@@ -29,10 +29,14 @@ at ``[offsets[g], offsets[g] + counts[g])`` (the compacted order
 ``dispatch_metadata`` emits). Both ``offsets`` and ``counts`` ride as
 scalar-prefetch operands; each live row-tile issues one dynamic-offset DMA
 (``pltpu.make_async_copy`` from the ANY-space flat array into a VMEM
-scratch tile) and feeds the MXU from the scratch. The padded bucket tensor
-is never materialized in HBM — that's the one dispatch round-trip per MoE
-layer the fused path removes. Dead tiles skip the DMA *and* the MXU, so
-the ragged FLOP/byte accounting is unchanged.
+scratch tile) and feeds the MXU from the scratch. The gathers are
+**double-buffered** against the MXU: two scratch tiles + two DMA
+semaphores, and every grid step starts the *next* live tile's copy before
+waiting on its own, so the fetch for tile ``t+1`` overlaps tile ``t``'s
+matmul (``_gather_pipeline``). The padded bucket tensor is never
+materialized in HBM — that's the one dispatch round-trip per MoE layer the
+fused path removes. Dead tiles skip the DMA *and* the MXU, so the ragged
+FLOP/byte accounting is unchanged.
 """
 
 from __future__ import annotations
@@ -194,35 +198,81 @@ def _pad_rows(x: jax.Array, bm: int) -> tuple[jax.Array, int]:
     return jnp.pad(x, ((0, bm), (0, 0))), x.shape[0] + bm
 
 
-def _gather_tile(x_any, xbuf, sem, off_ref, gi, mi, k, *, bm, bk, r_max):
-    """DMA one (bm, bk) row-tile of bucket ``gi`` from the flat array."""
+def _gather_dma(x_any, xbuf, sem, off_ref, gi, mi, k, slot, *, bm, bk, r_max):
+    """Descriptor for the (bm, bk) row-tile DMA of bucket ``gi`` into
+    double-buffer ``slot`` (start and wait happen at the call sites)."""
     start = jnp.minimum(off_ref[gi] + mi * bm, r_max)
-    cp = pltpu.make_async_copy(
-        x_any.at[pl.ds(start, bm), pl.ds(k * bk, bk)], xbuf, sem
+    return pltpu.make_async_copy(
+        x_any.at[pl.ds(start, bm), pl.ds(k * bk, bk)],
+        xbuf.at[slot],
+        sem.at[slot],
     )
-    cp.start()
-    cp.wait()
+
+
+def _gather_pipeline(gs_ref, *, g, nmi, nj, nk, bm):
+    """Double-buffer bookkeeping shared by the gather kernels.
+
+    Returns ``(live, t, nxt)``: this step's liveness, its linear step index
+    (slot = ``t % 2``), and — for the *next* grid step in row-major order —
+    ``(gi, mi, k, live)`` so its DMA can start before this step waits on
+    its own (overlapping the copy with this step's MXU work)."""
+    gi = pl.program_id(0)
+    mi = pl.program_id(1)
+    j = pl.program_id(2)
+    k = pl.program_id(3)
+    live = mi * bm < gs_ref[gi]
+    t = ((gi * nmi + mi) * nj + j) * nk + k
+
+    k1 = k + 1
+    kr = (k1 == nk).astype(jnp.int32)
+    k1 = k1 * (1 - kr)
+    j1 = j + kr
+    jr = (j1 == nj).astype(jnp.int32)
+    j1 = j1 * (1 - jr)
+    mi1 = mi + jr
+    mr = (mi1 == nmi).astype(jnp.int32)
+    mi1 = mi1 * (1 - mr)
+    gi1 = gi + mr
+    has_next = gi1 < g
+    next_live = has_next & (mi1 * bm < gs_ref[jnp.minimum(gi1, g - 1)])
+    return live, t, (gi1, mi1, k1, next_live)
 
 
 def _gather_kernel(
     off_ref, gs_ref, x_any, w_ref, o_ref, acc_ref, xbuf, sem,
-    *, nk: int, bm: int, bk: int, r_max: int,
+    *, g: int, nmi: int, nj: int, nk: int, bm: int, bk: int, r_max: int,
 ):
     gi = pl.program_id(0)
     mi = pl.program_id(1)
     k = pl.program_id(3)
     count = gs_ref[gi]
-    live = mi * bm < count
+    live, t, (gi1, mi1, k1, next_live) = _gather_pipeline(
+        gs_ref, g=g, nmi=nmi, nj=nj, nk=nk, bm=bm
+    )
+    dma = functools.partial(
+        _gather_dma, x_any, xbuf, sem, off_ref, bm=bm, bk=bk, r_max=r_max
+    )
 
     @pl.when(k == 0)
     def _():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    # Warm-up: the very first grid step fetches its own tile.
+    @pl.when((t == 0) & live)
+    def _():
+        dma(gi, mi, k, 0).start()
+
+    # Pipeline: start the next live step's gather into the other buffer
+    # before waiting on ours — the copy overlaps this step's matmul.
+    @pl.when(next_live)
+    def _():
+        dma(gi1, mi1, k1, (t + 1) % 2).start()
+
     @pl.when(live)
     def _():
-        _gather_tile(x_any, xbuf, sem, off_ref, gi, mi, k, bm=bm, bk=bk, r_max=r_max)
+        dma(gi, mi, k, t % 2).wait()
         acc_ref[...] += jax.lax.dot_general(
-            xbuf[...],
+            xbuf[t % 2],
             w_ref[0],
             (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -273,13 +323,15 @@ def gmm_gather(
         out_specs=pl.BlockSpec((1, bm, bn), lambda gi, i, j, k, off, gs: (gi, i, j)),
         scratch_shapes=[
             pltpu.VMEM((bm, bn), jnp.float32),
-            pltpu.VMEM((bm, bk), x.dtype),
-            pltpu.SemaphoreType.DMA(()),
+            pltpu.VMEM((2, bm, bk), x.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
     )
     return pl.pallas_call(
         functools.partial(
-            _gather_kernel, nk=nk, bm=bm, bk=bk, r_max=r_pad - bm
+            _gather_kernel,
+            g=g, nmi=capacity // bm, nj=f // bn, nk=nk,
+            bm=bm, bk=bk, r_max=r_pad - bm,
         ),
         grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((g, capacity, f), x.dtype),
@@ -289,28 +341,41 @@ def gmm_gather(
 
 def _gather_dual_kernel(
     off_ref, gs_ref, x_any, wg_ref, wu_ref, o_ref, accg_ref, accu_ref, xbuf, sem,
-    *, nk: int, bm: int, bk: int, r_max: int,
+    *, g: int, nmi: int, nj: int, nk: int, bm: int, bk: int, r_max: int,
 ):
     gi = pl.program_id(0)
     mi = pl.program_id(1)
     k = pl.program_id(3)
     count = gs_ref[gi]
-    live = mi * bm < count
+    live, t, (gi1, mi1, k1, next_live) = _gather_pipeline(
+        gs_ref, g=g, nmi=nmi, nj=nj, nk=nk, bm=bm
+    )
+    dma = functools.partial(
+        _gather_dma, x_any, xbuf, sem, off_ref, bm=bm, bk=bk, r_max=r_max
+    )
 
     @pl.when(k == 0)
     def _():
         accg_ref[...] = jnp.zeros_like(accg_ref)
         accu_ref[...] = jnp.zeros_like(accu_ref)
 
+    @pl.when((t == 0) & live)
+    def _():
+        dma(gi, mi, k, 0).start()
+
+    @pl.when(next_live)
+    def _():
+        dma(gi1, mi1, k1, (t + 1) % 2).start()
+
     @pl.when(live)
     def _():
-        _gather_tile(x_any, xbuf, sem, off_ref, gi, mi, k, bm=bm, bk=bk, r_max=r_max)
+        dma(gi, mi, k, t % 2).wait()
         dims = (((1,), (0,)), ((), ()))
         accg_ref[...] += jax.lax.dot_general(
-            xbuf[...], wg_ref[0], dims, preferred_element_type=jnp.float32
+            xbuf[t % 2], wg_ref[0], dims, preferred_element_type=jnp.float32
         )
         accu_ref[...] += jax.lax.dot_general(
-            xbuf[...], wu_ref[0], dims, preferred_element_type=jnp.float32
+            xbuf[t % 2], wu_ref[0], dims, preferred_element_type=jnp.float32
         )
 
     @pl.when(k == nk - 1)
@@ -356,13 +421,15 @@ def gmm_dual_act_gather(
         scratch_shapes=[
             pltpu.VMEM((bm, bn), jnp.float32),
             pltpu.VMEM((bm, bn), jnp.float32),
-            pltpu.VMEM((bm, bk), x.dtype),
-            pltpu.SemaphoreType.DMA(()),
+            pltpu.VMEM((2, bm, bk), x.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
     )
     return pl.pallas_call(
         functools.partial(
-            _gather_dual_kernel, nk=nk, bm=bm, bk=bk, r_max=r_pad - bm
+            _gather_dual_kernel,
+            g=g, nmi=capacity // bm, nj=f // bn, nk=nk,
+            bm=bm, bk=bk, r_max=r_pad - bm,
         ),
         grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((g, capacity, f), x.dtype),

@@ -33,7 +33,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention.ops import flash_attention_op
-from repro.kernels.flash_decode.ops import flash_decode_op
+from repro.kernels.flash_decode.flash_decode import merge_partials
+from repro.kernels.flash_decode.ops import (
+    flash_decode_op,
+    flash_decode_paged_op,
+    flash_decode_partials_op,
+)
 from repro.kernels.gmm.ops import expert_ffn_gather as _expert_ffn_gather_op
 from repro.kernels.gmm.ops import expert_ffn_ragged as _expert_ffn_ragged_op
 from repro.kernels.gmm.ref import expert_ffn_gather_ref, expert_ffn_ragged_ref
@@ -295,3 +300,61 @@ def decode_attend(
 ) -> jax.Array:
     interpret = default_interpret() if interpret is None else interpret
     return flash_decode_op(q, k, v, valid.astype(jnp.int32), interpret=interpret)
+
+
+def decode_attend_partials(
+    q: jax.Array,        # (B, H, hd)
+    k: jax.Array,        # (B, T, K, hd) — one shard's KV slice
+    v: jax.Array,
+    valid: jax.Array,    # (B, T)
+    *,
+    interpret: bool | None = None,
+):
+    """Unnormalized fp32 ``(acc, m, l)`` over this KV slice. Partials over
+    disjoint slices LSE-merge exactly — ``merge_decode_partials`` does it
+    across a named mesh axis (the sequence-parallel decode path)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return flash_decode_partials_op(
+        q, k, v, valid.astype(jnp.int32), interpret=interpret
+    )
+
+
+# the cross-shard LSE merge (psum/pmax over a named axis) — kernel partials
+# ride the collective as-is, no per-shard normalization round-trip.
+merge_decode_partials = merge_partials
+
+
+# ---------------------------------------------------------------------------
+# paged flash decode (block-table KV walk over a shared page pool)
+# ---------------------------------------------------------------------------
+
+def can_flash_decode_paged(
+    page_size: int, nh: int, nkv: int, hd: int, interpret: bool
+) -> bool:
+    """Compiled paged decode streams (page_size, hd) k/v panels: last dims
+    must hit the MXU/VPU native tiles. Interpret mode takes anything."""
+    if nkv <= 0 or nh % nkv:
+        return False
+    if interpret:
+        return True
+    return hd % 128 == 0 and page_size % 128 == 0
+
+
+def decode_attend_paged(
+    q: jax.Array,             # (B, H, hd)
+    pool_k: jax.Array,        # (P, page_size, K, hd) shared page pool
+    pool_v: jax.Array,
+    block_tables: jax.Array,  # (B, NB) int32 logical block -> physical page
+    lengths: jax.Array,       # (B,) int32 live context per request
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Paged decode: walks only ``ceil(lengths / page_size)`` live pages per
+    request (dead blocks clamp to the last live page and skip the MXU), so
+    decode HBM traffic tracks actual context, not the pool/max_seq size."""
+    interpret = default_interpret() if interpret is None else interpret
+    return flash_decode_paged_op(
+        q, pool_k, pool_v,
+        block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+        interpret=interpret,
+    )

@@ -42,6 +42,16 @@ def main():
         help="Pallas kernel dispatch: auto=TPU only, on=everywhere "
         "(interpret off-TPU), off=einsum reference paths",
     )
+    ap.add_argument(
+        "--paged", action="store_true",
+        help="paged KV cache: shared page pool + per-request block tables "
+        "(decode HBM tracks live context, not max_seq)",
+    )
+    ap.add_argument("--page-size", type=int, default=128)
+    ap.add_argument(
+        "--pool-pages", type=int, default=None,
+        help="oversubscribe the page pool (default: fully backed)",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -69,6 +79,9 @@ def main():
         batch=args.requests,
         slots_per_device=args.slots,
         alpha=args.alpha,
+        paged=args.paged,
+        page_size=args.page_size,
+        pool_pages=args.pool_pages,
     )
     cm = mesh if mesh is not None else _null()
     with cm:

@@ -22,6 +22,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.kernels import registry
 from repro.models.layers import apply_rope, normal_init
+from repro.parallel.collectives import seq_parallel_decode_attend
 from repro.parallel.compat import shard_map
 from repro.parallel.ctx import ParallelCtx
 
@@ -208,9 +209,9 @@ def _flash_decode_eligible(q, k_cache, ctx: ParallelCtx) -> bool:
     if ctx.mesh is None:
         return True
     if ctx.seq_parallel_kv:
-        # Cache seq dim rides the model axis; the flash-decode kernel
-        # normalizes locally, so the cross-shard LSE merge stays with
-        # ``seq_parallel_decode_attend`` (kernelizing it = open item).
+        # Cache seq dim rides the model axis: decode goes through
+        # ``seq_parallel_decode_attend`` (kernel partials + LSE-merge psum
+        # when eligible) — see ``_seq_parallel_decode_eligible``.
         return False
     return nh % ctx.n_model == 0 and nkv % ctx.n_model == 0 and b % ctx.n_batch == 0
 
@@ -310,13 +311,127 @@ def cross_kv(
 # decode (single new token against a cache)
 # ---------------------------------------------------------------------------
 
+PAGE_SIZE = 128  # default logical KV page (rows per physical pool page)
+
+
+def cache_len(cfg: ModelConfig, max_seq: int) -> int:
+    """Logical KV slots a decode cache holds (ring length when windowed)."""
+    w = cfg.sliding_window or 0
+    return min(max_seq, w) if w else max_seq
+
+
 def cache_init(
     cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32
 ) -> dict:
-    w = cfg.sliding_window or 0
-    length = min(max_seq, w) if w else max_seq
+    length = cache_len(cfg, max_seq)
     shape = (batch, length, cfg.n_kv_heads, cfg.head_dim_)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_layout(cfg: ModelConfig, max_seq: int, page_size: int = PAGE_SIZE):
+    """``(page_size, n_blocks)`` for a paged cache of ``max_seq`` context.
+
+    Full attention tolerates a partial tail block (prefix validity masks
+    it), so any page size works. A sliding-window ring must be a whole
+    number of pages — prefix validity over ``NB * bs`` logical slots *is*
+    the ring's live set only when ``NB * bs == ring length`` — so the page
+    shrinks to the largest divisor of the ring length ≤ ``page_size``
+    (compiled-kernel eligibility may then fall back to the gather
+    reference; see ``registry.can_flash_decode_paged``).
+    """
+    length = cache_len(cfg, max_seq)
+    bs = max(min(page_size, length), 1)
+    if cfg.sliding_window:
+        while length % bs:
+            bs -= 1
+    return bs, -(-length // bs)
+
+
+def paged_cache_init(
+    cfg: ModelConfig,
+    batch: int,
+    max_seq: int,
+    dtype=jnp.float32,
+    page_size: int = PAGE_SIZE,
+    n_pages: int | None = None,
+) -> dict:
+    """Paged decode cache: a shared page pool + per-request block tables.
+
+    * ``pool_k`` / ``pool_v`` — ``(P, bs, K, hd)``: physical pages, shared
+      across requests (``P`` defaults to ``batch * NB`` = fully backed);
+    * ``tables`` — ``(B, NB)`` int32: logical block ``j`` of request ``b``
+      lives in pool page ``tables[b, j]`` (identity layout by default; a
+      serving-side allocator may remap freely);
+    * ``lengths`` — ``(B,)`` int32: tokens *written* per request. The live
+      context is ``min(lengths, NB * bs)`` (ring wraps in place).
+
+    With an explicit ``n_pages`` (allocator mode, possibly oversubscribed:
+    ``n_pages < batch * NB``) the pool gets **one extra write-off page** at
+    index ``n_pages`` and every table entry starts there: scatters through
+    unallocated entries land on the write-off page and are never read back
+    (prefix validity stops before them; the dead-block clamp in the kernel
+    only revisits live pages). A serving allocator (`runtime.serve.PagePool`)
+    hands out pages ``0..n_pages-1`` per request and frees them on release.
+    """
+    bs, nb = paged_layout(cfg, max_seq, page_size)
+    if n_pages is None:
+        pool_pages = batch * nb
+        tables = jnp.arange(pool_pages, dtype=jnp.int32).reshape(batch, nb)
+    else:
+        pool_pages = n_pages + 1   # + write-off page for unallocated entries
+        tables = jnp.full((batch, nb), n_pages, jnp.int32)
+    shape = (pool_pages, bs, cfg.n_kv_heads, cfg.head_dim_)
+    return {
+        "pool_k": jnp.zeros(shape, dtype),
+        "pool_v": jnp.zeros(shape, dtype),
+        "tables": tables,
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def is_paged(cache: dict) -> bool:
+    return "pool_k" in cache
+
+
+def paged_prefill_fill(
+    cache: dict,
+    k: jax.Array,              # (B, S, K, hd) — the prompt's keys
+    v: jax.Array,
+    s: int,
+    lengths: jax.Array | None = None,   # (B,) true prompt lengths (<= S)
+) -> dict:
+    """Scatter a prefill's K/V into the page pool through the block tables.
+
+    Token ``t`` of request ``b`` lands at logical slot ``t % cap``
+    (identical to the decode write), so after writing ``L_b`` tokens, slot
+    ``j`` holds position ``L_b - 1 - ((L_b - 1 - j) % cap)`` — a *per-
+    request* gather, which handles ragged right-padded prompts and
+    ring-wrapped prefills (``L_b > cap``) uniformly (negative positions =
+    never written; they fall outside the ``min(L_b, cap)`` live prefix).
+    Table entries may point at a write-off page (unallocated blocks of an
+    oversubscribed pool — see ``runtime.serve.PagePool``); rows scattered
+    there are never read back.
+    """
+    pool_k, pool_v, tables = cache["pool_k"], cache["pool_v"], cache["tables"]
+    b, nb = tables.shape
+    bs = pool_k.shape[1]
+    cap = nb * bs
+    written = (
+        lengths.astype(jnp.int32)
+        if lengths is not None
+        else jnp.full((b,), s, jnp.int32)
+    )
+    j = jnp.arange(cap)[None, :]                       # (1, cap)
+    last = written[:, None] - 1                        # (B, 1)
+    pos = last - ((last - j) % cap)                    # (B, cap)
+    idx = jnp.clip(pos, 0, s - 1)[:, :, None, None]
+    kk = jnp.take_along_axis(k, idx, axis=1)           # (B, cap, K, hd)
+    vv = jnp.take_along_axis(v, idx, axis=1)
+    flat = tables.reshape(-1)
+    page_shape = (b * nb, bs, *kk.shape[2:])
+    pool_k = pool_k.at[flat].set(kk.reshape(page_shape))
+    pool_v = pool_v.at[flat].set(vv.reshape(page_shape))
+    return {"pool_k": pool_k, "pool_v": pool_v, "tables": tables, "lengths": written}
 
 
 def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, ctx: ParallelCtx):
@@ -329,13 +444,14 @@ def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, ctx: ParallelCtx):
 def decode_attention(
     p: dict,
     x: jax.Array,            # (B, 1, d)
-    cache: dict,             # {"k","v"}: (B, L, K, hd)
+    cache: dict,             # dense {"k","v"} or paged (see paged_cache_init)
     pos: jax.Array,          # scalar int32 — absolute position of new token
     cfg: ModelConfig,
     ctx: ParallelCtx,
 ) -> tuple[jax.Array, dict]:
+    if is_paged(cache):
+        return _paged_decode_attention(p, x, cache, cfg, ctx)
     b = x.shape[0]
-    h = cfg.head_dim_
     q, k_new, v_new = qkv_proj(p, x, cfg, ctx)
     posb = jnp.broadcast_to(pos, (b, 1))
     if cfg.rope_theta > 0:
@@ -344,7 +460,19 @@ def decode_attention(
 
     length = cache["k"].shape[1]
     w = cfg.sliding_window or 0
-    slot = jnp.where(w > 0, pos % length, jnp.minimum(pos, length - 1))
+    if w > 0:
+        slot = pos % length
+    else:
+        # Overflow (pos >= length): the cache is full. Freeze it — skip the
+        # write (it would silently clobber the last slot's key) and clamp
+        # the mask below, so slot j always holds position j. The serving
+        # layer refuses such steps outright (Server.decode raises).
+        slot = jnp.minimum(pos, length - 1)
+        old_k = jax.lax.dynamic_slice_in_dim(cache["k"], slot, 1, axis=1)
+        old_v = jax.lax.dynamic_slice_in_dim(cache["v"], slot, 1, axis=1)
+        overflow = pos >= length
+        k_new = jnp.where(overflow, old_k, k_new)
+        v_new = jnp.where(overflow, old_v, v_new)
     k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
     v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
 
@@ -355,12 +483,133 @@ def decode_attention(
         slot_pos = pos - ((pos - j) % length)
         mask = slot_pos >= 0
     else:
-        mask = j <= pos
+        mask = j <= jnp.minimum(pos, length - 1)
     if _flash_decode_eligible(q, k_cache, ctx):
         valid = jnp.broadcast_to(mask[None, :], (b, length))
         o = _flash_decode(q, k_cache, v_cache, valid, ctx)
+    elif _seq_parallel_decode_eligible(q, k_cache, ctx):
+        o = seq_parallel_decode_attend(q, k_cache, v_cache, mask, ctx)
     else:
         o = gqa_attend(q, k_cache, v_cache, mask[None, None, None, None, :])
     o = ctx.shard(o, ctx.batch_spec, None, ctx.model_axis, None)
     out = out_proj(p, o, ctx)
     return out, {"k": k_cache, "v": v_cache}
+
+
+def _seq_parallel_decode_eligible(q, k_cache, ctx: ParallelCtx) -> bool:
+    """Sequence-parallel decode: the cache's seq dim rides the model axis
+    and each shard runs flash-decode partials locally, LSE-merged with a
+    psum (`seq_parallel_decode_attend`). The shard_map just needs the
+    sharded dims to divide their axes; whether the *kernel* or the einsum
+    computes the per-shard partials is decided inside the collective."""
+    if not ctx.seq_parallel_kv or ctx.mesh is None or ctx.force_dense_attn:
+        return False
+    b, _, _, _ = q.shape
+    t = k_cache.shape[1]
+    return t % ctx.n_model == 0 and b % ctx.n_batch == 0
+
+
+# ---------------------------------------------------------------------------
+# paged decode (block-table KV walk over a shared page pool)
+# ---------------------------------------------------------------------------
+
+def _paged_decode_eligible(q, pool_k, ctx: ParallelCtx) -> bool:
+    if not ctx.kernels_on or ctx.force_dense_attn:
+        return False
+    b, _, nh, hd = q.shape
+    bs, nkv = pool_k.shape[1], pool_k.shape[2]
+    if not registry.can_flash_decode_paged(
+        bs, nh, nkv, hd, registry.default_interpret()
+    ):
+        return False
+    if ctx.mesh is None:
+        return True
+    # Under a mesh the pool is replicated over the batch axes (pages are
+    # dynamically owned — the page dim can't shard by request) and kv-heads
+    # ride the model axis.
+    return nh % ctx.n_model == 0 and nkv % ctx.n_model == 0 and b % ctx.n_batch == 0
+
+
+def _paged_flash_decode(q, pool_k, pool_v, tables, lengths, ctx: ParallelCtx):
+    """q: (B, 1, H, hd) -> (B, 1, H, hd) via the paged kernel."""
+    q1 = q[:, 0]
+    if ctx.mesh is None:
+        o = registry.decode_attend_paged(q1, pool_k, pool_v, tables, lengths)
+        return o[:, None]
+    bspec, ax = ctx.batch_spec, ctx.model_axis
+    o = shard_map(
+        lambda qb, kb, vb, tb, lb: registry.decode_attend_paged(
+            qb, kb, vb, tb, lb
+        ),
+        mesh=ctx.mesh,
+        in_specs=(
+            P(bspec, ax, None),
+            P(None, None, ax, None),
+            P(None, None, ax, None),
+            P(bspec, None),
+            P(bspec),
+        ),
+        out_specs=P(bspec, ax, None),
+        check_vma=False,
+    )(q1, pool_k, pool_v, tables, lengths)
+    return o[:, None]
+
+
+def _paged_decode_attention(
+    p: dict,
+    x: jax.Array,            # (B, 1, d)
+    cache: dict,             # paged: pool_k/pool_v/tables/lengths
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+) -> tuple[jax.Array, dict]:
+    """One decode step against a paged cache.
+
+    Per-request ``lengths`` replace the global scalar position: each
+    request RoPEs and writes at its own absolute position, so batched
+    requests of different context lengths decode together. The write is a
+    pool scatter (page = ``tables[b, slot // bs]``, row = ``slot % bs``);
+    the ring case wraps ``slot`` over the ``NB * bs`` logical slots and
+    prefix validity ``min(written, NB*bs)`` is exactly the ring's live set
+    (softmax is permutation-invariant; RoPE is applied at write time).
+    """
+    pool_k, pool_v = cache["pool_k"], cache["pool_v"]
+    tables, written = cache["tables"], cache["lengths"]
+    bs = pool_k.shape[1]
+    cap = tables.shape[1] * bs
+    w = cfg.sliding_window or 0
+
+    q, k_new, v_new = qkv_proj(p, x, cfg, ctx)
+    posb = written[:, None]  # (B, 1) — per-request position of the new token
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k_new = apply_rope(k_new, posb, cfg.rope_theta)
+
+    slot = written % cap if w > 0 else jnp.minimum(written, cap - 1)
+    page = jnp.take_along_axis(tables, (slot // bs)[:, None], axis=1)[:, 0]
+    row = slot % bs
+    if w == 0:
+        # Same freeze-on-overflow contract as the dense cache: a request
+        # at capacity stops writing (serving refuses the step anyway).
+        overflow = (written >= cap)[:, None, None, None]
+        k_new = jnp.where(overflow, pool_k[page, row][:, None], k_new)
+        v_new = jnp.where(overflow, pool_v[page, row][:, None], v_new)
+    pool_k = pool_k.at[page, row].set(k_new[:, 0])
+    pool_v = pool_v.at[page, row].set(v_new[:, 0])
+    written = written + 1
+    live = jnp.minimum(written, cap)
+
+    if _paged_decode_eligible(q, pool_k, ctx):
+        o = _paged_flash_decode(q, pool_k, pool_v, tables, live, ctx)
+    else:
+        from repro.kernels.flash_decode.ref import gather_pages
+
+        k_all = gather_pages(pool_k, tables)
+        v_all = gather_pages(pool_v, tables)
+        mask = jnp.arange(cap)[None, :] < live[:, None]
+        o = gqa_attend(q, k_all, v_all, mask[:, None, None, None, :])
+    o = ctx.shard(o, ctx.batch_spec, None, ctx.model_axis, None)
+    out = out_proj(p, o, ctx)
+    new_cache = {
+        "pool_k": pool_k, "pool_v": pool_v, "tables": tables, "lengths": written,
+    }
+    return out, new_cache

@@ -30,12 +30,16 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import ssm
 from repro.models.attention import (
+    PAGE_SIZE,
     attn_init,
     attention,
     cache_init,
     cross_attention,
     cross_kv,
     decode_attention,
+    is_paged,
+    paged_cache_init,
+    paged_prefill_fill,
 )
 from repro.models.layers import mlp_apply, mlp_init, normal_init, rms_norm
 from repro.models.moe import moe_apply, moe_init, zero_aux
@@ -303,12 +307,33 @@ def _xlstm_forward(params, x, cfg, ctx):
 # decode: cache init / prefill / one-token step
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32) -> dict:
-    """Decode cache sized for ``max_seq`` context."""
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_seq: int,
+    dtype=jnp.float32,
+    paged: bool = False,
+    page_size: int = PAGE_SIZE,
+    n_pages: int | None = None,
+) -> dict:
+    """Decode cache sized for ``max_seq`` context.
+
+    ``paged=True`` (``attn`` pattern only) swaps the dense per-layer
+    ``(B, L, K, hd)`` k/v for a shared page pool + per-request block tables
+    (`attention.paged_cache_init`): decode HBM traffic then tracks each
+    request's live context, and an oversubscribed pool (``n_pages``) lets a
+    serving-side allocator share pages across requests of varied lengths.
+    """
     pat = cfg.block_pattern
+    if paged and pat != "attn":
+        raise ValueError(f"paged KV cache requires block_pattern='attn', got {pat}")
     cache: dict = {"pos": jnp.zeros((), jnp.int32)}
     if pat == "attn":
-        one = cache_init(cfg, batch, max_seq, dtype)
+        one = (
+            paged_cache_init(cfg, batch, max_seq, dtype, page_size, n_pages)
+            if paged
+            else cache_init(cfg, batch, max_seq, dtype)
+        )
         cache["layers"] = jax.tree.map(
             lambda z: jnp.broadcast_to(z, (cfg.n_layers, *z.shape)).copy(), one
         )
@@ -508,8 +533,20 @@ def prefill(
     embeds=None,
     max_seq: int | None = None,
     dtype=jnp.float32,
+    paged: bool = False,
+    page_size: int = PAGE_SIZE,
+    n_pages: int | None = None,
+    tables=None,               # (B, NB) int32 — allocator-provided block tables
+    lengths=None,              # (B,) int32 — true per-request prompt lengths
 ):
-    """Process the prompt; return (last-position logits, primed cache)."""
+    """Process the prompt; return (last-position logits, primed cache).
+
+    Paged mode: ``tables`` lets a serving allocator place each request's
+    blocks in a shared (possibly oversubscribed) pool; ``lengths`` marks
+    true prompt lengths for right-padded ragged batches — pad positions
+    fall outside each request's validity prefix and are overwritten as the
+    request decodes.
+    """
     b, s = tokens.shape
     pat = cfg.block_pattern
     x = _embed(params, tokens, cfg, ctx)
@@ -517,7 +554,12 @@ def prefill(
         x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
         s = x.shape[1]
     max_seq = max(max_seq or s, s)
-    cache = init_cache(cfg, b, max_seq, dtype)
+    cache = init_cache(cfg, b, max_seq, dtype, paged, page_size, n_pages)
+    if tables is not None:
+        nl = cfg.n_layers
+        cache["layers"]["tables"] = jnp.broadcast_to(
+            tables.astype(jnp.int32), (nl, *tables.shape)
+        ).copy()
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
 
     if pat == "attn":
@@ -528,16 +570,19 @@ def prefill(
             z = rms_norm(h, p_l["ln1"], cfg.norm_eps)
             o, (k, v) = attention(p_l["attn"], z, cfg, ctx, positions, return_kv=True)
             h = h + o
-            length = c_l["k"].shape[1]
-            kk, vv = k[:, -length:], v[:, -length:]
-            if cfg.sliding_window and s >= length:
-                # Align to the decode ring buffer: slot j holds pos%W == j.
-                kk = jnp.roll(kk, s % length, axis=1)
-                vv = jnp.roll(vv, s % length, axis=1)
-            c_new = {
-                "k": jax.lax.dynamic_update_slice(c_l["k"], kk, (0, 0, 0, 0)),
-                "v": jax.lax.dynamic_update_slice(c_l["v"], vv, (0, 0, 0, 0)),
-            }
+            if is_paged(c_l):
+                c_new = paged_prefill_fill(c_l, k, v, s, lengths)
+            else:
+                length = c_l["k"].shape[1]
+                kk, vv = k[:, -length:], v[:, -length:]
+                if cfg.sliding_window and s >= length:
+                    # Align to the decode ring buffer: slot j holds pos%W == j.
+                    kk = jnp.roll(kk, s % length, axis=1)
+                    vv = jnp.roll(vv, s % length, axis=1)
+                c_new = {
+                    "k": jax.lax.dynamic_update_slice(c_l["k"], kk, (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(c_l["v"], vv, (0, 0, 0, 0)),
+                }
             z2 = rms_norm(h, p_l["ln2"], cfg.norm_eps)
             if cfg.is_moe:
                 y, a = moe_apply(p_l["moe"], z2, cfg, ctx)

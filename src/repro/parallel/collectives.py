@@ -472,6 +472,21 @@ def esp_expert_ffn(
 # sequence-parallel flash-decode merge
 # ---------------------------------------------------------------------------
 
+def seq_parallel_decode_kernel_eligible(
+    t: int, nh: int, nkv: int, hd: int, ctx: ParallelCtx
+) -> bool:
+    """Can each shard's partials come from the flash-decode kernel? The
+    kernel emits unnormalized ``(acc, m, l)`` (``return_partials``), so the
+    cross-shard LSE merge rides the psum as-is — decode with
+    ``seq_parallel_kv=True`` takes the kernel path."""
+    if not ctx.kernels_on or ctx.force_dense_attn:
+        return False
+    t_local = t // ctx.n_model
+    return registry.can_flash_decode(
+        t_local, nh, nkv, hd, registry.default_interpret()
+    )
+
+
 def seq_parallel_decode_attend(
     q: jax.Array,        # (B, 1, H, hd) — replicated over model axis
     k_cache: jax.Array,  # (B, L, K, hd) — L sharded over model axis
@@ -480,9 +495,25 @@ def seq_parallel_decode_attend(
     ctx: ParallelCtx,
 ) -> jax.Array:
     """Flash-decode across the model axis: each shard attends over its KV
-    chunk with a local log-sum-exp, partial results merge with a psum."""
+    chunk, partial results LSE-merge with a psum.
+
+    Kernel path (when eligible): per-shard partials come straight from
+    ``flash_decode(..., return_partials=True)`` — unnormalized ``(acc, m,
+    l)`` — and ``registry.merge_decode_partials`` does the cross-shard
+    merge, so no per-shard normalization round-trip. Fallback: the einsum
+    partials below (identical math, unfused)."""
     mesh = ctx.mesh
     axis = ctx.model_axis
+    use_kernel = seq_parallel_decode_kernel_eligible(
+        k_cache.shape[1], q.shape[2], k_cache.shape[2], q.shape[3], ctx
+    )
+
+    def kernel_body(q_blk, k_blk, v_blk, m_blk):
+        b, t_local = q_blk.shape[0], k_blk.shape[1]
+        valid = jnp.broadcast_to(m_blk[None, :], (b, t_local))
+        acc, m, l = registry.decode_attend_partials(q_blk[:, 0], k_blk, v_blk, valid)
+        out = registry.merge_decode_partials(acc, m, l, axis)
+        return out[:, None].astype(q_blk.dtype)
 
     def body(q_blk, k_blk, v_blk, m_blk):
         b, _, nh, hd = q_blk.shape
@@ -510,7 +541,7 @@ def seq_parallel_decode_attend(
 
     bspec = ctx.batch_spec
     return shard_map(
-        body,
+        kernel_body if use_kernel else body,
         mesh=mesh,
         in_specs=(
             P(bspec, None, None, None),

@@ -140,13 +140,31 @@ def cache_specs(cfg: ModelConfig, cache_shapes, ctx: ParallelCtx, batch: int):
             spec[len(shape) - model_from_end] = m
         return P(*spec)
 
+    def pool_spec(shape):
+        # (L?, P, bs, K, hd): pages are dynamically owned (allocator), so
+        # the page dim can't shard by request — replicate over batch axes
+        # and put kv-heads on the model axis when divisible.
+        spec = [None] * len(shape)
+        if _ok(shape[-2], n_model):
+            spec[-2] = m
+        return P(*spec)
+
     pat = cfg.block_pattern
     specs: dict = {"pos": P()}
     if pat in ("attn", "encdec"):
-        specs["layers"] = {
-            "k": kv_spec(cache_shapes["layers"]["k"].shape),
-            "v": kv_spec(cache_shapes["layers"]["v"].shape),
-        }
+        layer_shapes = cache_shapes["layers"]
+        if "pool_k" in layer_shapes:   # paged KV cache (see attention.py)
+            specs["layers"] = {
+                "pool_k": pool_spec(layer_shapes["pool_k"].shape),
+                "pool_v": pool_spec(layer_shapes["pool_v"].shape),
+                "tables": bdim_spec(layer_shapes["tables"].shape, 2),
+                "lengths": bdim_spec(layer_shapes["lengths"].shape, 1),
+            }
+        else:
+            specs["layers"] = {
+                "k": kv_spec(layer_shapes["k"].shape),
+                "v": kv_spec(layer_shapes["v"].shape),
+            }
         if pat == "encdec":
             specs["cross_kv"] = tuple(
                 kv_spec(x.shape) for x in cache_shapes["cross_kv"]

@@ -34,6 +34,7 @@ from repro.core.ni_balancer import (
     should_trigger,
     topology_aware_balance,
 )
+from repro.models import attention as A
 from repro.models import transformer as T
 from repro.parallel.collectives import uniform_placement
 from repro.parallel.ctx import ParallelCtx
@@ -47,6 +48,49 @@ class ServeConfig:
     alpha: float = 0.5             # Eq. 2 imbalance threshold
     beta: float = 0.0              # Eq. 2 refractory (0 = non-invasive)
     ema: float = 0.8
+    # Paged KV cache: requests share a physical page pool through per-
+    # request block tables (attention.paged_cache_init); `pool_pages`
+    # oversubscribes the pool vs the dense `batch * ceil(max_seq / page)`
+    # worst case — ragged batches then fit where dense caches wouldn't.
+    paged: bool = False
+    page_size: int = A.PAGE_SIZE
+    pool_pages: int | None = None  # None = fully backed (batch * NB)
+
+
+class PagePool:
+    """Host-side physical-page allocator for the paged KV cache.
+
+    Pages are plain int ids into the pool's leading dim; ``alloc``/``free``
+    are O(1) list ops off the jit path (the device-side scatter/gather goes
+    through the block *tables*, which reference these ids). Exhaustion
+    raises — admission control belongs to the caller.
+    """
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, -1, -1))
+        self._live: set[int] = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, have {len(self._free)} "
+                f"of {self.n_pages}"
+            )
+        pages = [self._free.pop() for _ in range(n)]
+        self._live.update(pages)
+        return pages
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if p not in self._live:
+                raise ValueError(f"double free of page {p}")
+            self._live.discard(p)
+            self._free.append(p)
 
 
 class Server:
@@ -102,30 +146,212 @@ class Server:
             self.slot_of = self.n_replicas = None
             self.state = None
 
+        prefill_kw: dict = {}
+        if serve_cfg.paged:
+            self.page_size, self.n_blocks = A.paged_layout(
+                cfg, serve_cfg.max_seq, serve_cfg.page_size
+            )
+            backed = serve_cfg.batch * self.n_blocks
+            self.n_pool_pages = serve_cfg.pool_pages or backed
+            self.page_pool = PagePool(self.n_pool_pages)
+            self.trash_page = self.n_pool_pages  # write-off page index
+            self._tables = np.full(
+                (serve_cfg.batch, self.n_blocks), self.trash_page, np.int32
+            )
+            self._pages: dict[int, list[int]] = {}
+            self._released: set[int] = set()
+            self._tables_dirty = False
+            # host-side mirror of per-request written counts (lengths): the
+            # block-boundary check must not force a device sync per token.
+            self._written: np.ndarray | None = None
+            prefill_kw = dict(
+                paged=True,
+                page_size=serve_cfg.page_size,
+                n_pages=self.n_pool_pages,
+            )
+        # host-side mirror of cache["pos"] — the overflow guard must not
+        # block on the previous step's device computation every token.
+        self._pos: int | None = None
+        # donate the *cache* (argnum 2: params, token, cache). Donating the
+        # token (the old argnums=(1,)) was an off-by-one: harmless off-mesh
+        # (XLA refused it — the recurring "donated buffers were not usable"
+        # warning), but under a mesh the donation can be accepted and
+        # generate() then concatenates a deleted token array.
         self._decode = jax.jit(
             functools.partial(T.decode_step, cfg=cfg, ctx=ctx),
-            donate_argnums=(1,),
+            donate_argnums=(2,),
         )
         self._prefill = jax.jit(
             functools.partial(
-                T.prefill, cfg=cfg, ctx=ctx, max_seq=serve_cfg.max_seq
+                T.prefill, cfg=cfg, ctx=ctx, max_seq=serve_cfg.max_seq,
+                **prefill_kw,
             ),
             static_argnames=(),
         )
 
     # -- request lifecycle ---------------------------------------------------
 
-    def prefill(self, tokens, embeds=None):
-        logits, cache = self._prefill(self.params, tokens, embeds=embeds)
+    def _prompt_rows(self, tokens, embeds) -> int:
+        """KV rows a prefill writes per request: prompt tokens plus any
+        prepended frontend-stub embeddings (see T.prefill)."""
+        s = tokens.shape[1]
+        if (
+            embeds is not None
+            and self.cfg.frontend_stub
+            and self.cfg.block_pattern != "encdec"
+        ):
+            s += embeds.shape[1]
+        return s
+
+    def prefill(self, tokens, embeds=None, lengths=None):
+        """Prime a cache for a batch of prompts.
+
+        Paged mode: allocates each request's blocks from the shared pool
+        (``lengths`` marks true per-request prompt lengths for right-padded
+        ragged batches — shorter requests hold fewer pages; prepended
+        frontend embeds count toward every request). Pages of a previously
+        prefilled batch are auto-released."""
+        s = self._prompt_rows(tokens, embeds)
+        if not self.scfg.paged:
+            logits, cache = self._prefill(self.params, tokens, embeds=embeds)
+            self._pos = s
+            return logits, cache
+        b = tokens.shape[0]
+        n_embed = s - tokens.shape[1]
+        lens = (
+            np.full(b, s, np.int32)
+            if lengths is None
+            else np.asarray(lengths, np.int32) + n_embed
+        )
+        for slot in list(self._pages):
+            self.release(slot)
+        self._released = set()
+        self._tables = np.full((b, self.n_blocks), self.trash_page, np.int32)
+        self._tables_dirty = False
+        cap = self.n_blocks * self.page_size
+        for slot in range(b):
+            need = min(-(-int(min(lens[slot], cap)) // self.page_size), self.n_blocks)
+            pages = self.page_pool.alloc(need)
+            self._pages[slot] = pages
+            self._tables[slot, :need] = pages
+        logits, cache = self._prefill(
+            self.params,
+            tokens,
+            embeds=embeds,
+            tables=jnp.asarray(self._tables),
+            lengths=jnp.asarray(lens),
+        )
+        self._written = lens.copy()
+        self._pos = s
         return logits, cache
 
+    def release(self, slot: int, cache: dict | None = None):
+        """Free request ``slot``'s pages back to the pool. With ``cache``,
+        also clears its table row and length immediately; without it, the
+        device tables are refreshed on the next ``decode`` (before any
+        write), so the freed pages are never scattered into once they're
+        re-allocated. The batch row keeps stepping (its writes land on the
+        write-off page and its output is meaningless until re-admitted) —
+        ``decode`` pins its length back to 0 each step so it never grows a
+        live prefix or new pages."""
+        self.page_pool.free(self._pages.pop(slot, []))
+        self._released.add(slot)
+        self._tables[slot, :] = self.trash_page
+        if self._written is not None:
+            self._written[slot] = 0
+        if cache is None:
+            self._tables_dirty = True
+            return None
+        layers = dict(cache["layers"])
+        layers["tables"] = self._stacked_tables(layers["tables"].shape[0])
+        layers["lengths"] = layers["lengths"].at[:, slot].set(0)
+        return {**cache, "layers": layers}
+
+    def _stacked_tables(self, n_layers: int):
+        return jnp.broadcast_to(
+            jnp.asarray(self._tables), (n_layers, *self._tables.shape)
+        ).copy()
+
+    def _ensure_pages(self, cache: dict) -> dict:
+        """Allocate the page a request's next write lands on, if its block
+        table doesn't back it yet (lazy per-request growth at block
+        boundaries). Both the boundary check (host mirror ``_written``) and
+        the alloc are host-side — no per-token device sync on the hot path."""
+        layers = cache["layers"]
+        if self._written is None:
+            # cache primed outside this Server (e.g. T.prefill directly):
+            # sync the mirror once, then track host-side. No pages to grow
+            # (this Server's allocator doesn't own that cache's mapping).
+            self._written = np.asarray(layers["lengths"][0]).copy()
+        written = self._written
+        cap = self.n_blocks * self.page_size
+        w = self.cfg.sliding_window or 0
+        changed = self._tables_dirty   # release(slot) without a cache handle
+        self._tables_dirty = False
+        for slot in self._pages:
+            nxt = int(written[slot]) % cap if w else min(int(written[slot]), cap - 1)
+            blk = nxt // self.page_size
+            if self._tables[slot, blk] == self.trash_page:
+                (page,) = self.page_pool.alloc(1)
+                self._pages[slot].append(page)
+                self._tables[slot, blk] = page
+                changed = True
+        if not changed:
+            return cache
+        layers = dict(layers)
+        layers["tables"] = self._stacked_tables(layers["tables"].shape[0])
+        return {**cache, "layers": layers}
+
     def decode(self, token, cache):
+        if self._pos is None:   # cache primed outside this Server
+            self._pos = int(cache["pos"])
+        pos = self._pos
+        windowed = bool(self.cfg.sliding_window or 0)
+        if self.scfg.paged:
+            cache = self._ensure_pages(cache)   # also syncs _written
+            if not windowed:
+                # Per-request occupancy: a ragged batch keeps serving as
+                # long as every *live* request has headroom (releasing a
+                # finished request really does restore capacity).
+                cap = self.n_blocks * self.page_size
+                live = self._pages or range(len(self._written))
+                full = [s for s in live if self._written[s] >= cap]
+                if full:
+                    raise RuntimeError(
+                        f"decode past capacity={cap} for request(s) {full} "
+                        f"(cache full): release them or raise max_seq"
+                    )
+        elif not windowed and pos >= self.scfg.max_seq:
+            # Dense caches used to clobber the last slot silently here;
+            # both layouts now freeze at capacity and serving refuses.
+            raise RuntimeError(
+                f"decode past max_seq={self.scfg.max_seq} (cache full, "
+                f"pos={pos}): release the request or raise max_seq"
+            )
         placement = (
             (self.slot_of, self.n_replicas) if self.use_balancer else None
         )
         logits, cache, stats = self._decode(
             self.params, token, cache, placement=placement
         )
+        if self.scfg.paged and self._written is not None:
+            for slot in range(len(self._written)):
+                if slot not in self._released:
+                    self._written[slot] += 1
+            if self._released:
+                # keep released rows inert: the model step incremented their
+                # length past 0, which would grow a live prefix over the
+                # write-off page — pin it back down.
+                lengths = cache["layers"]["lengths"]
+                idx = jnp.asarray(sorted(self._released))
+                cache = {
+                    **cache,
+                    "layers": {
+                        **cache["layers"],
+                        "lengths": lengths.at[:, idx].set(0),
+                    },
+                }
+        self._pos = pos + 1
         self.t += 1
         if self.use_balancer:
             counts = np.asarray(stats["expert_counts"])

@@ -135,7 +135,8 @@ def test_seq_parallel_decode_and_compressed_sync_8dev():
         """
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from repro.parallel.collectives import seq_parallel_decode_attend
+        from repro.parallel.collectives import (
+            seq_parallel_decode_attend, seq_parallel_decode_kernel_eligible)
         from repro.models.attention import gqa_attend
         from repro.parallel.ctx import ParallelCtx
         from repro.launch.mesh import make_mesh_compat
@@ -149,6 +150,14 @@ def test_seq_parallel_decode_and_compressed_sync_8dev():
         with mesh:
             out = jax.jit(lambda q,k,v,m: seq_parallel_decode_attend(q,k,v,m,ctx))(q,k,v,mask)
         assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+        # kernelized merge: flash-decode partials + psum LSE merge must take
+        # the kernel path (eligibility) and match the einsum reference.
+        ctx_k = ParallelCtx(mesh=mesh, use_kernels=True)
+        assert seq_parallel_decode_kernel_eligible(16, 8, 4, 16, ctx_k)
+        assert not seq_parallel_decode_kernel_eligible(16, 8, 4, 16, ctx)
+        with mesh:
+            out_k = jax.jit(lambda q,k,v,m: seq_parallel_decode_attend(q,k,v,m,ctx_k))(q,k,v,mask)
+        assert float(jnp.max(jnp.abs(out_k - ref))) < 1e-5, "kernelized merge parity"
         # compressed cross-pod sync: mean preserved within int8 error
         mesh2 = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
         from repro.parallel.grad_compress import compressed_pod_mean
@@ -161,6 +170,50 @@ def test_seq_parallel_decode_and_compressed_sync_8dev():
         """
     )
     assert "SP_OK" in out
+
+
+def test_paged_decode_under_mesh_8dev():
+    """Paged decode under a mesh (pool kv-heads on the model axis, pool
+    replicated over batch): parity with the no-mesh dense cache, kernel
+    path on (interpret). Also: seq_parallel_kv decode rides the kernelized
+    merge inside full decode_attention."""
+    out = _run(
+        """
+        import jax, jax.numpy as jnp, dataclasses
+        from repro.configs import get_config, smoke
+        from repro.models import attention as A
+        from repro.parallel.ctx import ParallelCtx
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
+        cfg = dataclasses.replace(smoke(get_config("llama3.2-1b")),
+                                  n_heads=8, n_kv_heads=4)
+        ctx0 = ParallelCtx()
+        ctx_p = ParallelCtx(mesh=mesh, use_kernels=True, seq_parallel_kv=False)
+        ctx_sp = ParallelCtx(mesh=mesh, use_kernels=True)  # seq_parallel_kv
+        p = A.attn_init(jax.random.PRNGKey(0), cfg)
+        b, max_seq = 4, 32
+        dense = A.cache_init(cfg, b, max_seq)
+        dense_sp = A.cache_init(cfg, b, max_seq)
+        paged = A.paged_cache_init(cfg, b, max_seq, page_size=8)
+        x0 = jax.random.normal(jax.random.PRNGKey(1), (b, 1, cfg.d_model)) * 0.3
+        pos = jnp.asarray(0, jnp.int32)
+        with mesh:
+            for step in range(10):
+                x = x0 * (step % 4 + 1) / 4
+                o_ref, dense = A.decode_attention(p, x, dense, pos, cfg, ctx0)
+                o_p, paged = jax.jit(lambda p,x,c,t: A.decode_attention(
+                    p, x, c, t, cfg, ctx_p))(p, x, paged, pos)
+                o_sp, dense_sp = jax.jit(lambda p,x,c,t: A.decode_attention(
+                    p, x, c, t, cfg, ctx_sp))(p, x, dense_sp, pos)
+                err_p = float(jnp.max(jnp.abs(o_ref - o_p)))
+                err_sp = float(jnp.max(jnp.abs(o_ref - o_sp)))
+                assert err_p < 2e-5, ("paged", step, err_p)
+                assert err_sp < 2e-5, ("seq_parallel", step, err_sp)
+                pos = pos + 1
+        print("PAGED_MESH_OK")
+        """
+    )
+    assert "PAGED_MESH_OK" in out
 
 
 def test_server_migration_preserves_outputs_8dev():

@@ -1,0 +1,517 @@
+"""Paged-KV flash decode: kernel parity, partials merge, model-level cache
+parity (full + sliding-window ring), serving page pool, overflow guard.
+
+All Pallas paths run with interpret=True on CPU (the kernels target TPU).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.kernels import registry
+from repro.kernels.flash_decode.ops import (
+    flash_decode_paged_op,
+    flash_decode_partials_op,
+)
+from repro.kernels.flash_decode.paged import flash_decode_paged
+from repro.kernels.flash_decode.ref import (
+    decode_ref,
+    gather_pages,
+    paged_decode_ref,
+)
+from repro.models import attention as A
+from repro.models import transformer as T
+from repro.parallel.ctx import ParallelCtx
+from repro.runtime.serve import PagePool, Server, ServeConfig
+
+RNG = jax.random.PRNGKey(0)
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _pool(key, b, nb, bs, nkv, hd, dtype=jnp.float32):
+    """Identity-table pool covering (b, nb*bs) logical slots."""
+    k = jax.random.normal(key, (b * nb, bs, nkv, hd), dtype)
+    tables = jnp.arange(b * nb, dtype=jnp.int32).reshape(b, nb)
+    return k, tables
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,nb,bs,h,kv,hd,lengths",
+    [
+        (3, 4, 64, 8, 2, 32, [200, 64, 1]),       # partial / boundary / single
+        (2, 2, 128, 4, 4, 64, [256, 256]),        # every block full
+        (3, 4, 16, 16, 8, 16, [15, 16, 17]),      # single-block edges
+        (1, 8, 32, 4, 2, 32, [129, 0, 0][:1]),    # long, one past a boundary
+    ],
+)
+def test_paged_kernel_parity(b, nb, bs, h, kv, hd, lengths, dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    pool_k, tables = _pool(ks[1], b, nb, bs, kv, hd, dtype)
+    pool_v, _ = _pool(ks[2], b, nb, bs, kv, hd, dtype)
+    ln = jnp.asarray(lengths, jnp.int32)
+    out = flash_decode_paged_op(q, pool_k, pool_v, tables, ln)
+    ref = paged_decode_ref(
+        q.astype(jnp.float32),
+        pool_k.astype(jnp.float32),
+        pool_v.astype(jnp.float32),
+        tables,
+        ln,
+    )
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else TOL
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref), **tol)
+
+
+def test_paged_kernel_scrambled_table():
+    """Physical page order must not matter — only the block table does."""
+    b, nb, bs, h, kv, hd = 2, 4, 32, 4, 2, 16
+    ks = jax.random.split(RNG, 4)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    pool_k, tables = _pool(ks[1], b, nb, bs, kv, hd)
+    pool_v, _ = _pool(ks[2], b, nb, bs, kv, hd)
+    ln = jnp.asarray([100, 40], jnp.int32)
+    ref = paged_decode_ref(q, pool_k, pool_v, tables, ln)
+    perm = jax.random.permutation(ks[3], b * nb)
+    pk = jnp.zeros_like(pool_k).at[perm].set(pool_k)
+    pv = jnp.zeros_like(pool_v).at[perm].set(pool_v)
+    t2 = perm[tables.reshape(-1)].reshape(b, nb).astype(jnp.int32)
+    out = flash_decode_paged_op(q, pk, pv, t2, ln)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_paged_kernel_skips_dead_blocks_bytes():
+    """The dead-block clamp revisits the last live page, so distinct pages
+    touched == live blocks — garbage in dead pages must not leak through."""
+    b, nb, bs, h, kv, hd = 2, 8, 16, 4, 2, 16
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    pool_k, tables = _pool(ks[1], b, nb, bs, kv, hd)
+    pool_v, _ = _pool(ks[2], b, nb, bs, kv, hd)
+    ln = jnp.asarray([20, 40], jnp.int32)
+    ref = paged_decode_ref(q, pool_k, pool_v, tables, ln)
+    # poison every dead page (block index >= ceil(len/bs))
+    dead = np.ones((b * nb,), bool)
+    for bi, l in enumerate([20, 40]):
+        live_blocks = -(-l // bs)
+        dead[bi * nb : bi * nb + live_blocks] = False
+    poison = jnp.where(jnp.asarray(dead)[:, None, None, None], jnp.nan, 0.0)
+    out = flash_decode_paged_op(q, pool_k + poison, pool_v + poison, tables, ln)
+    assert np.isfinite(np.asarray(out)).all(), "dead-page NaNs leaked"
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# partials + LSE merge
+# ---------------------------------------------------------------------------
+
+def _merge(parts):
+    ms = jnp.stack([m for _, m, _ in parts])
+    mm = jnp.max(ms, axis=0)
+    num = sum(a * jnp.exp(m - mm)[..., None] for a, m, _ in parts)
+    den = sum(l * jnp.exp(m - mm) for _, m, l in parts)
+    return num / jnp.maximum(den, 1e-30)[..., None]
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_dense_partials_merge(n_shards):
+    """flash_decode partials over disjoint KV slices merge to the full
+    masked softmax — the sequence-parallel decode contract."""
+    b, t, h, kv, hd = 2, 256, 8, 2, 32
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    k = jax.random.normal(ks[1], (b, t, kv, hd))
+    v = jax.random.normal(ks[2], (b, t, kv, hd))
+    valid = (jnp.arange(t)[None, :] < 70).astype(jnp.int32).repeat(b, 0)
+    ref = decode_ref(q, k, v, valid)
+    sl = t // n_shards
+    parts = [
+        flash_decode_partials_op(
+            q, k[:, i * sl : (i + 1) * sl], v[:, i * sl : (i + 1) * sl],
+            valid[:, i * sl : (i + 1) * sl],
+        )
+        for i in range(n_shards)
+    ]
+    np.testing.assert_allclose(np.asarray(_merge(parts)), np.asarray(ref), **TOL)
+    # shards past the fill are fully masked and must contribute nothing
+    acc, m, l = parts[-1]
+    assert float(jnp.max(m)) <= -1e29
+
+
+def test_paged_partials_match_dense_partials():
+    b, nb, bs, h, kv, hd = 2, 4, 32, 4, 2, 16
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    pool_k, tables = _pool(ks[1], b, nb, bs, kv, hd)
+    pool_v, _ = _pool(ks[2], b, nb, bs, kv, hd)
+    ln = jnp.asarray([100, 40], jnp.int32)
+    k = gather_pages(pool_k, tables)
+    v = gather_pages(pool_v, tables)
+    valid = (jnp.arange(nb * bs)[None, :] < ln[:, None]).astype(jnp.int32)
+    a1, m1, l1 = flash_decode_partials_op(q, k, v, valid)
+    a2, m2, l2 = jax.jit(
+        lambda *args: flash_decode_paged(
+            *args, return_partials=True, interpret=True
+        )
+    )(q, pool_k, pool_v, tables, ln)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), **TOL)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# model-level cache parity
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    return dataclasses.replace(smoke(get_config("llama3.2-1b")), **kw)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_decode_attention_paged_vs_dense(use_kernels):
+    cfg = _cfg()
+    ctx = ParallelCtx(use_kernels=use_kernels)
+    p = A.attn_init(RNG, cfg)
+    b, max_seq = 3, 48
+    dense = A.cache_init(cfg, b, max_seq)
+    paged = A.paged_cache_init(cfg, b, max_seq, page_size=16)
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (b, 1, cfg.d_model)) * 0.3
+    pos = jnp.asarray(0, jnp.int32)
+    for step in range(18):
+        x = x0 * (step % 5 + 1) / 5
+        od, dense = A.decode_attention(p, x, dense, pos, cfg, ParallelCtx())
+        op, paged = A.decode_attention(p, x, paged, pos, cfg, ctx)
+        np.testing.assert_allclose(np.asarray(od), np.asarray(op), **TOL)
+        pos = pos + 1
+    # lengths advanced per request
+    assert np.all(np.asarray(paged["lengths"]) == 18)
+
+
+def test_decode_attention_ring_wraparound():
+    """Sliding-window ring as a small block table: parity with the dense
+    pos % L ring across several wraps (window not a page multiple — the
+    page shrinks to a divisor)."""
+    cfg = _cfg(sliding_window=12)
+    bs, nb = A.paged_layout(cfg, 64, page_size=8)
+    assert bs * nb == 12 and bs < 8, (bs, nb)  # shrunk to a divisor of 12
+    ctx = ParallelCtx()
+    p = A.attn_init(RNG, cfg)
+    b = 2
+    dense = A.cache_init(cfg, b, 64)
+    paged = A.paged_cache_init(cfg, b, 64, page_size=8)
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (b, 1, cfg.d_model)) * 0.3
+    pos = jnp.asarray(0, jnp.int32)
+    for step in range(30):   # wraps the 12-slot ring twice
+        x = x0 * (step % 7 + 1) / 7
+        od, dense = A.decode_attention(p, x, dense, pos, cfg, ctx)
+        op, paged = A.decode_attention(p, x, paged, pos, cfg, ctx)
+        np.testing.assert_allclose(np.asarray(od), np.asarray(op), **TOL)
+        pos = pos + 1
+
+
+def test_prefill_paged_then_decode_parity():
+    cfg = _cfg()
+    ctx = ParallelCtx()
+    params = T.init_params(RNG, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 9), 0, cfg.vocab_size)
+    ld, cd = T.prefill(params, tokens, cfg, ctx, max_seq=32)
+    lp, cp = T.prefill(params, tokens, cfg, ctx, max_seq=32, paged=True, page_size=8)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lp), **TOL)
+    tok = jnp.argmax(ld[:, -1:], -1).astype(jnp.int32)
+    for _ in range(6):
+        ld, cd, _ = T.decode_step(params, tok, cd, cfg, ctx)
+        lp, cp, _ = T.decode_step(params, tok, cp, cfg, ctx)
+        np.testing.assert_allclose(np.asarray(ld), np.asarray(lp), **TOL)
+        tok = jnp.argmax(ld[:, -1:], -1).astype(jnp.int32)
+
+
+def test_paged_ragged_lengths_match_individual_requests():
+    """Batched requests of different context lengths decode together in one
+    paged cache; each must match its own single-request dense decode."""
+    cfg = _cfg()
+    ctx = ParallelCtx()
+    params = T.init_params(RNG, cfg)
+    lens = [3, 9, 6]
+    b, s = len(lens), max(lens)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab_size)
+    srv = Server(
+        cfg, ctx, params,
+        ServeConfig(max_seq=32, batch=b, paged=True, page_size=8, pool_pages=12),
+    )
+    logits, cache = srv.prefill(tokens, lengths=np.asarray(lens))
+    tok0 = jnp.zeros((b, 1), jnp.int32) + 7
+    steps = []
+    tok = tok0
+    for _ in range(5):
+        logits, cache = srv.decode(tok, cache)
+        steps.append(logits)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    for i, ln in enumerate(lens):
+        # single-request dense reference on the unpadded prompt
+        _, cref = T.prefill(params, tokens[i : i + 1, :ln], cfg, ctx, max_seq=32)
+        tok = tok0[i : i + 1]
+        for t in range(5):
+            lref, cref, _ = T.decode_step(params, tok, cref, cfg, ctx)
+            np.testing.assert_allclose(
+                np.asarray(lref[0]), np.asarray(steps[t][i]), rtol=1e-4, atol=1e-4
+            )
+            tok = jnp.argmax(lref[:, -1:], -1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# layout rules / eligibility gates
+# ---------------------------------------------------------------------------
+
+def test_paged_layout_rules():
+    cfg = _cfg()
+    assert A.paged_layout(cfg, 1024, 128) == (128, 8)
+    assert A.paged_layout(cfg, 100, 128) == (100, 1)        # one short block
+    assert A.paged_layout(cfg, 130, 128) == (128, 2)        # partial tail ok
+    cfgw = _cfg(sliding_window=12)
+    bs, nb = A.paged_layout(cfgw, 1024, 8)                  # ring: divisor only
+    assert bs * nb == 12 and 12 % bs == 0
+    cfgw2 = _cfg(sliding_window=256)
+    assert A.paged_layout(cfgw2, 1024, 128) == (128, 2)     # divides: unchanged
+
+
+def test_can_flash_decode_paged_gates():
+    assert registry.can_flash_decode_paged(128, 8, 2, 128, False)
+    assert not registry.can_flash_decode_paged(64, 8, 2, 128, False)   # page
+    assert not registry.can_flash_decode_paged(128, 8, 2, 64, False)   # hd
+    assert not registry.can_flash_decode_paged(128, 8, 3, 128, False)  # gqa
+    assert registry.can_flash_decode_paged(5, 8, 2, 12, True)          # interpret
+
+
+# ---------------------------------------------------------------------------
+# dense-cache overflow (regression: silent last-slot clobber)
+# ---------------------------------------------------------------------------
+
+def test_dense_overflow_freezes_and_server_raises():
+    cfg = _cfg()
+    ctx = ParallelCtx()
+    p = A.attn_init(RNG, cfg)
+    b, max_seq = 2, 8
+    cache = A.cache_init(cfg, b, max_seq)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, 1, cfg.d_model)) * 0.3
+    pos = jnp.asarray(0, jnp.int32)
+    for _ in range(max_seq):
+        _, cache = A.decode_attention(p, x, cache, pos, cfg, ctx)
+        pos = pos + 1
+    k_full = np.asarray(cache["k"]).copy()
+    out_over, cache = A.decode_attention(p, x, cache, pos, cfg, ctx)
+    # the cache froze: no silent clobber of the last slot
+    assert np.array_equal(k_full, np.asarray(cache["k"]))
+    # and the output is well-defined "frozen context" attention, not garbage
+    assert np.isfinite(np.asarray(out_over)).all()
+
+    params = T.init_params(RNG, cfg)
+    srv = Server(cfg, ctx, params, ServeConfig(max_seq=6, batch=1))
+    logits, c = srv.prefill(jnp.ones((1, 4), jnp.int32))
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    logits, c = srv.decode(tok, c)   # pos 4 -> ok
+    logits, c = srv.decode(tok, c)   # pos 5 -> ok
+    with pytest.raises(RuntimeError, match="max_seq"):
+        srv.decode(tok, c)           # pos 6 == max_seq -> refuse
+
+
+# ---------------------------------------------------------------------------
+# page pool allocator
+# ---------------------------------------------------------------------------
+
+def test_page_pool_alloc_free():
+    pool = PagePool(4)
+    a = pool.alloc(3)
+    assert len(set(a)) == 3 and pool.n_free == 1
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc(2)
+    pool.free(a[:2])
+    assert pool.n_free == 3
+    with pytest.raises(ValueError, match="double free"):
+        pool.free(a[:1] + a[:1])
+
+
+def test_server_pool_shared_across_ragged_batch():
+    """An oversubscribed pool (fewer pages than batch * NB) admits a ragged
+    batch, grows lazily at block boundaries, and frees on release."""
+    cfg = _cfg()
+    ctx = ParallelCtx()
+    params = T.init_params(RNG, cfg)
+    # max_seq 32 / page 8 -> 4 blocks/request; 3 requests would need 12
+    # pages fully backed — give the pool just 7.
+    srv = Server(
+        cfg, ctx, params,
+        ServeConfig(max_seq=32, batch=3, paged=True, page_size=8, pool_pages=7),
+    )
+    tokens = jax.random.randint(RNG, (3, 8), 0, cfg.vocab_size)
+    lens = np.asarray([2, 8, 5])
+    logits, cache = srv.prefill(tokens, lengths=lens)
+    assert srv.page_pool.n_free == 7 - 3          # one page each
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    for _ in range(8):                            # crosses a block boundary
+        logits, cache = srv.decode(tok, cache)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    assert srv.page_pool.n_free < 4
+    used_before = srv.page_pool.n_free
+    cache = srv.release(1, cache)
+    assert srv.page_pool.n_free > used_before
+    assert int(cache["layers"]["lengths"][0, 1]) == 0
+    # released rows stay inert across further steps: length pinned at 0,
+    # no pages re-allocated for them, live rows keep decoding
+    free_after_release = srv.page_pool.n_free
+    for _ in range(3):
+        logits, cache = srv.decode(tok, cache)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    assert int(cache["layers"]["lengths"][0, 1]) == 0
+    assert srv.page_pool.n_free == free_after_release
+    assert 1 not in srv._pages
+    # a fresh batch reuses the freed pages
+    srv.prefill(tokens, lengths=lens)
+    assert srv.page_pool.n_free == 7 - 3
+
+
+def test_server_decode_with_externally_primed_cache():
+    """A cache primed via T.prefill directly (not Server.prefill) must keep
+    decoding — no slot may be treated as released / pinned to length 0."""
+    cfg = _cfg()
+    ctx = ParallelCtx()
+    params = T.init_params(RNG, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 6), 0, cfg.vocab_size)
+    logits, cache = T.prefill(params, tokens, cfg, ctx, max_seq=32, paged=True, page_size=16)
+    srv = Server(
+        cfg, ctx, params,
+        ServeConfig(max_seq=32, batch=2, paged=True, page_size=16),
+    )
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    for step in range(4):
+        lref, cache_ref, _ = T.decode_step(params, tok, jax.tree.map(jnp.copy, cache), cfg, ctx)
+        lsrv, cache = srv.decode(tok, cache)
+        np.testing.assert_allclose(np.asarray(lref), np.asarray(lsrv), **TOL)
+        assert np.all(np.asarray(cache["layers"]["lengths"][0]) == 6 + step + 1)
+        tok = jnp.argmax(lsrv[:, -1:], -1).astype(jnp.int32)
+
+
+def test_paged_ragged_ring_wrap_prefill():
+    """Ragged right-padded prompts + a sliding-window ring that wraps during
+    prefill: the per-request slot gather must keep each request's own tail
+    (a global roll would fill short requests with pad-row K/V)."""
+    cfg = _cfg(sliding_window=8)
+    ctx = ParallelCtx()
+    params = T.init_params(RNG, cfg)
+    lens = [4, 16]          # request 1 wraps the 8-slot ring, request 0 not
+    b, s = len(lens), max(lens)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab_size)
+    srv = Server(
+        cfg, ctx, params,
+        ServeConfig(max_seq=32, batch=b, paged=True, page_size=4, pool_pages=6),
+    )
+    logits, cache = srv.prefill(tokens, lengths=np.asarray(lens))
+    tok0 = jnp.zeros((b, 1), jnp.int32) + 7
+    tok = tok0
+    steps = []
+    for _ in range(4):
+        logits, cache = srv.decode(tok, cache)
+        steps.append(logits)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    for i, ln in enumerate(lens):
+        _, cref = T.prefill(params, tokens[i : i + 1, :ln], cfg, ctx, max_seq=32)
+        tok = tok0[i : i + 1]
+        for t in range(4):
+            lref, cref, _ = T.decode_step(params, tok, cref, cfg, ctx)
+            np.testing.assert_allclose(
+                np.asarray(lref[0]), np.asarray(steps[t][i]), rtol=1e-4, atol=1e-4
+            )
+            tok = jnp.argmax(lref[:, -1:], -1).astype(jnp.int32)
+
+
+def test_server_paged_with_frontend_embeds():
+    """Prepended frontend-stub embeds count toward each request's live KV
+    rows (lengths / page allocation / overflow mirror)."""
+    cfg = smoke(get_config("internvl2-76b"))
+    assert cfg.frontend_stub and cfg.block_pattern == "attn"
+    ctx = ParallelCtx()
+    params = T.init_params(RNG, cfg)
+    b, s = 2, 5
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab_size)
+    embeds = jax.random.normal(jax.random.PRNGKey(3), (b, cfg.frontend_tokens, cfg.d_model)) * 0.02
+    out_d = Server(cfg, ctx, params, ServeConfig(max_seq=32, batch=b)).generate(
+        tokens, 6, embeds=embeds
+    )
+    srv = Server(cfg, ctx, params, ServeConfig(max_seq=32, batch=b, paged=True, page_size=8))
+    out_p = srv.generate(tokens, 6, embeds=embeds)
+    assert np.array_equal(np.asarray(out_d), np.asarray(out_p))
+    # lengths include the embed rows
+    assert srv._written[0] == s + cfg.frontend_tokens + 6
+
+
+def test_paged_overflow_guard_is_per_request():
+    """Releasing a finished request restores serving headroom: the paged
+    overflow guard keys on per-request occupancy, not the global step
+    count, so a ragged batch keeps decoding after its longest request is
+    done — and still refuses once a live request truly fills."""
+    cfg = _cfg()
+    ctx = ParallelCtx()
+    params = T.init_params(RNG, cfg)
+    srv = Server(
+        cfg, ctx, params,
+        ServeConfig(max_seq=16, batch=2, paged=True, page_size=8),
+    )
+    tokens = jax.random.randint(RNG, (2, 14), 0, cfg.vocab_size)
+    lens = np.asarray([4, 14])
+    logits, cache = srv.prefill(tokens, lengths=lens)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    for _ in range(2):                       # request 1 reaches 16 = cap
+        logits, cache = srv.decode(tok, cache)
+    cache = srv.release(1, cache)            # finished: frees its capacity
+    for _ in range(6):                       # request 0 keeps going (6..12)
+        logits, cache = srv.decode(tok, cache)
+    assert int(cache["layers"]["lengths"][0, 0]) == 12
+    for _ in range(4):                       # ... until IT fills at 16
+        logits, cache = srv.decode(tok, cache)
+    with pytest.raises(RuntimeError, match="cache full"):
+        srv.decode(tok, cache)
+
+
+def test_release_without_cache_refreshes_tables_before_write():
+    """release(slot) with no cache handle must still keep the freed pages
+    safe: the next decode pushes the trash-row table before any write, so a
+    page re-allocated to a live request is never scattered into."""
+    cfg = _cfg()
+    ctx = ParallelCtx()
+    params = T.init_params(RNG, cfg)
+    srv = Server(
+        cfg, ctx, params,
+        ServeConfig(max_seq=32, batch=2, paged=True, page_size=8, pool_pages=8),
+    )
+    tokens = jax.random.randint(RNG, (2, 8), 0, cfg.vocab_size)
+    logits, cache = srv.prefill(tokens)
+    srv.release(1)                      # no cache handle
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    logits, cache = srv.decode(tok, cache)
+    # slot 1's table row on device is now all write-off pages
+    trash = srv.trash_page
+    assert np.all(np.asarray(cache["layers"]["tables"][0, 1]) == trash)
+    assert int(cache["layers"]["lengths"][0, 1]) == 0
+    # slot 0 keeps decoding normally
+    assert int(cache["layers"]["lengths"][0, 0]) == 9
+
+
+def test_server_paged_generate_matches_dense():
+    cfg = _cfg()
+    ctx = ParallelCtx()
+    params = T.init_params(RNG, cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (2, 6), 0, cfg.vocab_size)
+    out_d = Server(cfg, ctx, params, ServeConfig(max_seq=32, batch=2)).generate(
+        prompt, 8
+    )
+    out_p = Server(
+        cfg, ctx, params, ServeConfig(max_seq=32, batch=2, paged=True, page_size=8)
+    ).generate(prompt, 8)
+    assert np.array_equal(np.asarray(out_d), np.asarray(out_p))

@@ -90,3 +90,22 @@ def test_cache_specs_match_structure():
         flat_c = jax.tree.leaves(cache)
         flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
         assert len(flat_c) == len(flat_s), arch
+
+
+def test_cache_specs_paged_structure():
+    """Paged cache leaves get specs too: pool kv-heads on the model axis,
+    pool page dim replicated (dynamic ownership), tables/lengths on batch."""
+    ctx = ParallelCtx()
+    cfg = get_config("llama3.2-1b")
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, 8, 64, jnp.bfloat16, paged=True, page_size=16)
+    )
+    specs = cache_specs(cfg, cache, ctx, batch=8)
+    layers = specs["layers"]
+    assert set(layers) == {"pool_k", "pool_v", "tables", "lengths"}
+    for name in ("pool_k", "pool_v"):
+        sp = layers[name]
+        assert len(sp) == 5 and sp[1] is None, (name, sp)  # page dim replicated
+    for name, sh in (("tables", cache["layers"]["tables"]),
+                     ("lengths", cache["layers"]["lengths"])):
+        assert len(layers[name]) == len(sh.shape), name

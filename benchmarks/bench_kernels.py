@@ -1,33 +1,48 @@
-"""Kernel-path benchmark: dispatch + expert-FFN (einsum vs padded vs ragged
-vs fused-gather), plus dense-vs-paged decode attention KV-byte accounting.
+"""Kernel-path benchmark: dispatch + expert-FFN + combine (einsum vs padded
+vs ragged vs fused-gather vs fused-compact), plus dense-vs-paged decode
+attention KV-byte accounting.
 
 Each shape cell drives the full MoE expert hot path *including token
-dispatch* (that's the HBM round-trip the fused path exists to remove):
+dispatch and the combine leg* (both HBM round-trips the fused paths exist
+to remove) — every path ends in the per-token weighted combine so outputs
+are directly comparable:
 
 * ``einsum_padded_dispatch``  — ``bucket_dispatch`` into ``(G, C, d)``
-  buffers + the XLA einsum FFN (the pre-kernel reference);
+  buffers + the XLA einsum FFN + ``bucket_combine`` (the pre-kernel
+  reference);
 * ``gmm_padded_dispatch``     — ``bucket_dispatch`` + the padded Pallas
   kernels (``gmm_dual_act`` + ``gmm``): every capacity row hits the MXU;
 * ``gmm_ragged_padded_dispatch`` — ``bucket_dispatch`` + the count-aware
   kernels: row-tiles past each bucket's fill skip the MXU, but the padded
-  buffers are still written/read through HBM;
+  buffers are still written/read through HBM on both legs;
 * ``gmm_gather_fused_dispatch``  — ``dispatch_metadata`` + the fused gather
   kernels (``gmm_dual_act_gather`` + ``gmm_ragged``): token rows stay in a
   flat compacted array and the kernel prologue gathers them via
-  scalar-prefetched per-bucket offsets — the ``(G, C, d)`` buffer never
-  exists.
+  scalar-prefetched per-bucket offsets — the ``(G, C, d)`` *input* buffer
+  never exists, but the FFN output is still bucket-padded and the combine
+  reads it;
+* ``gmm_compact_fused_combine`` — the gather prologue **plus the
+  ``gmm_scatter`` epilogue**: the down-projection writes result tiles back
+  at the same per-bucket offsets, so neither the padded input nor the
+  padded output buffer exists; ``combine_from_rows`` gathers each kept
+  copy through the dispatch metadata.
 
 Besides wall-clock, each row reports the FLOP accounting (``padded_gflop``
 = what a capacity-padded pass must execute, ``achieved_gflop`` = useful
 work at the measured routing, ``exec_gflop`` = what the path actually
-runs at tile granularity) and ``dispatch_hbm_mb`` — the bytes the dispatch
-stage moves through HBM (padded: write + read of ``G*C*d``; fused: write +
-read of the ``R = sum(counts)`` compacted rows). ``utilization`` =
-achieved/executed FLOPs.
+runs at tile granularity), ``dispatch_hbm_mb`` — the bytes the dispatch
+stage moves through HBM (padded: write + read of ``G*C*d``; fused: a
+row-granular write of the ``R = sum(counts)`` compacted rows + a
+tile-granular gather-DMA read, ``sum(ceil(count/bm)*bm)`` rows — the same
+ceil-tile convention as ``exec_gflop``) — and ``combine_hbm_mb``, the
+mirror accounting for the combine leg (padded paths write + read the
+``G*C*d`` FFN output; the compact path's scatter epilogue writes
+tile-granular rows and the metadata combine gathers the ``R`` live rows).
+``utilization`` = achieved/executed FLOPs.
 
-Shape cells cover balanced routing (every bucket full — the fused path
+Shape cells cover balanced routing (every bucket full — the fused paths
 must not lose here) and zipf-skewed routing (fig. 6 imbalance — where
-tile-skipping plus the smaller dispatch footprint win).
+tile-skipping plus the smaller dispatch *and* combine footprints win).
 
 Usage::
 
@@ -62,10 +77,20 @@ import numpy as np
 from repro.kernels.flash_decode.ops import flash_decode_op, flash_decode_paged_op
 from repro.kernels.flash_decode.ref import decode_ref
 from repro.kernels.gmm.gmm import gmm, gmm_dual_act
-from repro.kernels.gmm.ops import expert_ffn_gather, expert_ffn_ragged
+from repro.kernels.gmm.ops import (
+    expert_ffn_gather,
+    expert_ffn_gather_compact,
+    expert_ffn_ragged,
+)
 from repro.kernels.gmm.ref import expert_ffn_ref
 from repro.kernels.registry import default_interpret
-from repro.parallel.collectives import bucket_dispatch, dispatch_metadata, kept_counts
+from repro.parallel.collectives import (
+    bucket_combine,
+    bucket_dispatch,
+    combine_from_rows,
+    dispatch_metadata,
+    kept_counts,
+)
 
 # (name, G, C, D, F, balanced) — G buckets of capacity C, d_model D, expert
 # hidden F. Mirrors smoke-to-midsize EP cells (slots x capacity after
@@ -141,35 +166,54 @@ def run(iters: int = 20, smoke: bool = False) -> list[dict]:
         wu = jax.random.normal(ks[2], (g, d, f), dtype) * 0.1
         wd = jax.random.normal(ks[3], (g, f, d), dtype) * 0.1
 
+        wt = jnp.ones(ids.shape, dtype)  # router weights (k = 1)
+
         @jax.jit
         def einsum_fn(xt, ids, wg, wu, wd):
-            bufs, _, _ = bucket_dispatch(xt, ids, g, c)
-            return expert_ffn_ref(bufs, wg, wu, wd)
+            bufs, slots, keep = bucket_dispatch(xt, ids, g, c)
+            y = expert_ffn_ref(bufs, wg, wu, wd)
+            return bucket_combine(y, ids, slots, keep, wt)
 
         @jax.jit
         def padded_fn(xt, ids, wg, wu, wd):
-            bufs, _, _ = bucket_dispatch(xt, ids, g, c)
+            bufs, slots, keep = bucket_dispatch(xt, ids, g, c)
             h = gmm_dual_act(bufs, wg, wu, interpret=interpret)
-            return gmm(h, wd, interpret=interpret)
+            return bucket_combine(gmm(h, wd, interpret=interpret), ids, slots, keep, wt)
 
         @jax.jit
         def ragged_fn(xt, ids, wg, wu, wd):
-            bufs, _, keep = bucket_dispatch(xt, ids, g, c)
+            bufs, slots, keep = bucket_dispatch(xt, ids, g, c)
             gs = kept_counts(ids, keep, g)
-            return expert_ffn_ragged(bufs, wg, wu, wd, gs, interpret=interpret)
+            y = expert_ffn_ragged(bufs, wg, wu, wd, gs, interpret=interpret)
+            return bucket_combine(y, ids, slots, keep, wt)
 
         @jax.jit
         def fused_fn(xt, ids, wg, wu, wd):
-            row_ids, offsets, gs, _, _ = dispatch_metadata(ids, g, c)
-            return expert_ffn_gather(
+            row_ids, offsets, gs, slots, keep = dispatch_metadata(ids, g, c)
+            y = expert_ffn_gather(
                 xt[row_ids], wg, wu, wd, offsets, gs,
                 capacity=c, interpret=interpret,
             )
+            return bucket_combine(y, ids, slots, keep, wt)
 
-        # Cross-check all paths before timing (every bucket fill == count,
-        # so the padded einsum output equals the ragged/fused outputs).
+        @jax.jit
+        def compact_fn(xt, ids, wg, wu, wd):
+            row_ids, offsets, gs, slots, keep = dispatch_metadata(ids, g, c)
+            y = expert_ffn_gather_compact(
+                xt[row_ids], wg, wu, wd, offsets, gs,
+                capacity=c, interpret=interpret,
+            )
+            return combine_from_rows(y, offsets[ids] + slots, keep, wt)
+
+        # Cross-check all paths before timing — the outputs are per-token
+        # combined results, so padded-vs-compact divergence on *either* leg
+        # (dispatch or combine) fails here.
         ref = np.asarray(einsum_fn(xt, ids, wg, wu, wd))
-        for label, fn in (("ragged", ragged_fn), ("fused", fused_fn)):
+        for label, fn in (
+            ("ragged", ragged_fn),
+            ("fused", fused_fn),
+            ("compact", compact_fn),
+        ):
             np.testing.assert_allclose(
                 np.asarray(fn(xt, ids, wg, wu, wd)), ref,
                 rtol=2e-4, atol=2e-4, err_msg=f"{name}:{label} parity",
@@ -183,19 +227,29 @@ def run(iters: int = 20, smoke: bool = False) -> list[dict]:
         ragged_exec_gf = ragged_rows * flop_per_row / 1e9
         row_bytes = d * np.dtype(np.float32).itemsize
         padded_dispatch_mb = 2 * g * c * row_bytes / 1e6   # scatter out + read in
-        fused_dispatch_mb = 2 * n_tok * row_bytes / 1e6    # compacted rows only
+        # Fused legs are half row-granular (XLA scatter/gather of the
+        # compacted rows), half tile-granular (the kernel's dynamic-offset
+        # DMAs move whole (bm, ·) tiles, padding included — same ceil-tile
+        # convention as exec_gflop): dispatch writes n_tok rows and the
+        # gather prologue reads ragged_rows; the scatter epilogue writes
+        # ragged_rows and the combine gathers n_tok.
+        fused_dispatch_mb = (n_tok + ragged_rows) * row_bytes / 1e6
+        padded_combine_mb = 2 * g * c * row_bytes / 1e6
+        compact_combine_mb = (ragged_rows + n_tok) * row_bytes / 1e6
 
         t_e = _time(einsum_fn, xt, ids, wg, wu, wd, iters=iters)
         t_p = _time(padded_fn, xt, ids, wg, wu, wd, iters=iters)
         t_r = _time(ragged_fn, xt, ids, wg, wu, wd, iters=iters)
         t_f = _time(fused_fn, xt, ids, wg, wu, wd, iters=iters)
+        t_c = _time(compact_fn, xt, ids, wg, wu, wd, iters=iters)
 
-        def _path(t, exec_gf, dispatch_mb):
+        def _path(t, exec_gf, dispatch_mb, combine_mb):
             return {
                 "wall_ms": round(t * 1e3, 3),
                 "exec_gflop": round(exec_gf, 4),
                 "utilization": round(achieved_gf / exec_gf, 4) if exec_gf else 1.0,
                 "dispatch_hbm_mb": round(dispatch_mb, 4),
+                "combine_hbm_mb": round(combine_mb, 4),
             }
 
         rows.append(
@@ -212,13 +266,20 @@ def run(iters: int = 20, smoke: bool = False) -> list[dict]:
                 "padded_gflop": round(padded_gf, 4),
                 "achieved_gflop": round(achieved_gf, 4),
                 "paths": {
-                    "einsum_padded_dispatch": _path(t_e, padded_gf, padded_dispatch_mb),
-                    "gmm_padded_dispatch": _path(t_p, padded_gf, padded_dispatch_mb),
+                    "einsum_padded_dispatch": _path(
+                        t_e, padded_gf, padded_dispatch_mb, padded_combine_mb
+                    ),
+                    "gmm_padded_dispatch": _path(
+                        t_p, padded_gf, padded_dispatch_mb, padded_combine_mb
+                    ),
                     "gmm_ragged_padded_dispatch": _path(
-                        t_r, ragged_exec_gf, padded_dispatch_mb
+                        t_r, ragged_exec_gf, padded_dispatch_mb, padded_combine_mb
                     ),
                     "gmm_gather_fused_dispatch": _path(
-                        t_f, ragged_exec_gf, fused_dispatch_mb
+                        t_f, ragged_exec_gf, fused_dispatch_mb, padded_combine_mb
+                    ),
+                    "gmm_compact_fused_combine": _path(
+                        t_c, ragged_exec_gf, fused_dispatch_mb, compact_combine_mb
                     ),
                 },
             }
@@ -325,14 +386,20 @@ def main() -> None:
         "smoke": args.smoke,
         "note": (
             "wall_ms on non-TPU backends runs the Pallas paths in interpret "
-            "mode (semantics, not speed); FLOP and dispatch-byte accounting "
-            "is backend-independent. utilization = achieved/executed FLOPs; "
-            "dispatch_hbm_mb = HBM bytes the dispatch stage moves (the "
-            "fused gather path never materializes the padded buckets). "
-            "This bench drives the local/ESP-style dispatch; the EP "
-            "all_to_all path keeps a statically-sized exchange buffer "
-            "(equal splits), where the fusion instead removes the "
-            "receive-side repack + padded FFN input. decode_shapes compare "
+            "mode (semantics, not speed); FLOP and byte accounting is "
+            "backend-independent. utilization = achieved/executed FLOPs; "
+            "dispatch_hbm_mb / combine_hbm_mb = HBM bytes each leg moves; "
+            "fused-path DMA sides are counted at ceil-tile granularity "
+            "(the kernels move whole bm-row tiles), matching exec_gflop "
+            "(the fused gather path never materializes the padded input "
+            "buckets; the compact path's gmm_scatter epilogue never "
+            "materializes the padded FFN output either, and "
+            "combine_from_rows reads only live rows). All paths end in the "
+            "per-token combine, so parity covers both legs. This bench "
+            "drives the local/ESP-style dispatch; the EP all_to_all path "
+            "keeps statically-sized exchange buffers on both legs (equal "
+            "splits), where the fusion instead removes the receive-side "
+            "repack + padded FFN input/output. decode_shapes compare "
             "dense masked flash-decode (streams B*max_seq KV rows/step) "
             "against the paged block-table kernel (streams only live "
             "pages): kv_hbm_mb tracks context length, not max_seq."

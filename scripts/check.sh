@@ -48,6 +48,24 @@ np.testing.assert_allclose(
     np.asarray(expert_ffn_gather_ref(rows, wg, wu, wd, offs, gs, 16)),
     rtol=1e-5, atol=1e-5)
 
+# compact combine leg: scatter epilogue + metadata combine — live rows of
+# the flat output must match the compact oracle, and rows the combine
+# drops may hold NaN garbage without poisoning any kept token
+from repro.kernels.gmm.ops import expert_ffn_gather_compact
+from repro.kernels.gmm.ref import expert_ffn_compact_ref
+from repro.parallel.collectives import combine_from_rows
+compact = np.asarray(
+    expert_ffn_gather_compact(rows, wg, wu, wd, offs, gs, capacity=16))
+oracle = np.asarray(expert_ffn_compact_ref(rows, wg, wu, wd, offs, gs, 16))
+for off, cnt in zip(np.asarray(offs), np.asarray(gs)):
+    np.testing.assert_allclose(
+        compact[off:off+cnt], oracle[off:off+cnt], rtol=1e-5, atol=1e-5)
+yf = jnp.asarray(oracle).at[23].set(jnp.nan)  # garbage in a dropped row
+cmb = combine_from_rows(
+    yf, jnp.asarray([[0], [5], [23]]), jnp.asarray([[True], [True], [False]]),
+    jnp.ones((3, 1)))
+assert np.isfinite(np.asarray(cmb)).all(), "dropped-row garbage leaked into combine"
+
 q = jax.random.normal(ks[0], (1, 32, 4, 16))
 k = jax.random.normal(ks[1], (1, 32, 2, 16))
 v = jax.random.normal(ks[2], (1, 32, 2, 16))

@@ -18,6 +18,7 @@ from repro.kernels.gmm.ragged import (
     gmm_dual_act_ragged,
     gmm_gather,
     gmm_ragged,
+    gmm_scatter,
 )
 
 
@@ -132,4 +133,60 @@ def expert_ffn_gather(
     return gmm_ragged(
         h, wd, group_sizes,
         groups_per_weight=groups_per_weight, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("out_rows", "groups_per_weight", "interpret")
+)
+def gmm_scatter_op(
+    x,
+    w,
+    offsets,
+    group_sizes,
+    out_rows: int,
+    groups_per_weight: int = 1,
+    interpret: bool | None = None,
+):
+    interpret = _default_interpret() if interpret is None else interpret
+    return gmm_scatter(
+        x,
+        w,
+        offsets,
+        group_sizes,
+        out_rows=out_rows,
+        groups_per_weight=groups_per_weight,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "groups_per_weight", "interpret")
+)
+def expert_ffn_gather_compact(
+    x,
+    wg,
+    wu,
+    wd,
+    offsets,
+    group_sizes,
+    capacity: int,
+    groups_per_weight: int = 1,
+    interpret: bool | None = None,
+):
+    """Fully compact fused expert FFN: the gather prologue reads token rows
+    from the flat ``(R, D)`` activations and the ``gmm_scatter`` epilogue
+    writes the down-projection back at the same per-bucket offsets —
+    neither the padded FFN *input* nor *output* buffer ever exists; only
+    the bucket-padded hidden tensor remains."""
+    interpret = _default_interpret() if interpret is None else interpret
+    h = gmm_dual_act_gather(
+        x, wg, wu, offsets, group_sizes,
+        capacity=capacity, groups_per_weight=groups_per_weight,
+        interpret=interpret,
+    )
+    return gmm_scatter(
+        h, wd, offsets, group_sizes,
+        out_rows=x.shape[0], groups_per_weight=groups_per_weight,
+        interpret=interpret,
     )

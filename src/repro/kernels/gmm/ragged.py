@@ -37,6 +37,27 @@ matmul (``_gather_pipeline``). The padded bucket tensor is never
 materialized in HBM — that's the one dispatch round-trip per MoE layer the
 fused path removes. Dead tiles skip the DMA *and* the MXU, so the ragged
 FLOP/byte accounting is unchanged.
+
+``gmm_scatter`` is the *combine*-leg mirror of the gather prologue: a
+ragged grouped matmul (the expert down-projection) whose **epilogue writes
+result tiles back at the same per-bucket offsets** — a dynamic-offset
+store DMA from a VMEM staging tile into a flat ``(out_rows, d)`` ANY-space
+output, so the bucket-padded ``(G, capacity, d)`` FFN *output* buffer is
+never written to HBM either. Live tiles mask their tail rows to zero
+before storing; a partial tile's ``bm``-row store may therefore spill
+zeros past its bucket's segment, which is safe because (contract) each
+bucket's padded span ``[offsets[g], offsets[g] + ceil(count/bm)*bm)`` may
+only overlap rows of *later-in-grid* buckets — those overwrite the spill
+with their real rows (stores are issued and completed in grid order: each
+store waits for the previous one before starting, so a store is in flight
+across all the MXU work until the next store point). Both layouts the MoE
+paths produce satisfy the contract: offsets are non-decreasing in grid
+order per rank segment and ``capacity % bm == 0`` keeps padded spans
+inside their segment. Rows not covered by any live ``(bucket, position)``
+pair are *unwritten garbage* — the metadata-driven combine
+(``collectives.combine_from_rows``) never addresses them. Dead tiles skip
+the MXU and the store, so at skewed routing the combine-leg HBM bytes
+track routed tokens, exactly like the dispatch leg.
 """
 
 from __future__ import annotations
@@ -435,3 +456,140 @@ def gmm_dual_act_gather(
         out_shape=jax.ShapeDtypeStruct((g, capacity, f), x.dtype),
         interpret=interpret,
     )(offsets.astype(jnp.int32), group_sizes.astype(jnp.int32), x, wg, wu)
+
+
+# ---------------------------------------------------------------------------
+# fused compact-scatter variant (flat-row output at per-bucket offsets)
+# ---------------------------------------------------------------------------
+
+def _scatter_store(o_any, obuf, sem, off_ref, gi, mi, j, *, bm, bn, r_max):
+    """Descriptor for the (bm, bn) result-tile store of bucket ``gi`` row-
+    tile ``mi`` / column block ``j`` into the flat output (start and wait
+    happen at the call sites; the clamp only guards bogus offsets — live
+    tiles of a well-formed layout never hit it)."""
+    start = jnp.minimum(off_ref[gi] + mi * bm, r_max)
+    return pltpu.make_async_copy(
+        obuf,
+        o_any.at[pl.ds(start, bm), pl.ds(j * bn, bn)],
+        sem,
+    )
+
+
+def _scatter_kernel(
+    off_ref, gs_ref, x_ref, w_ref, o_any, acc_ref, obuf, pend, sem,
+    *, nsteps: int, nk: int, bm: int, bn: int, r_max: int,
+):
+    gi = pl.program_id(0)
+    mi = pl.program_id(1)
+    j = pl.program_id(2)
+    k = pl.program_id(3)
+    count = gs_ref[gi]
+    live = mi * bm < count
+    t = ((gi * pl.num_programs(1) + mi) * pl.num_programs(2) + j) * nk + k
+    store = functools.partial(
+        _scatter_store, o_any, obuf, sem, off_ref, bm=bm, bn=bn, r_max=r_max
+    )
+
+    @pl.when(t == 0)
+    def _():
+        pend[0] = 0  # no store in flight yet
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(live)
+    def _():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[0],
+            w_ref[0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    # Epilogue: stage the masked tile in VMEM and DMA it to the flat
+    # output at the bucket's offset. Stores are serialized against each
+    # other (wait the previous store before reusing the staging tile),
+    # which both frees the buffer and guarantees grid-order completion —
+    # the overlap-overwrite contract in the module docstring — while each
+    # store still overlaps all MXU work up to the next store point.
+    @pl.when((k == nk - 1) & live)
+    def _():
+        @pl.when(pend[0] == 1)
+        def _():
+            store(pend[1], pend[2], pend[3]).wait()
+
+        rows = mi * bm + jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 0)
+        obuf[...] = jnp.where(rows < count, acc_ref[...], 0.0).astype(obuf.dtype)
+        store(gi, mi, j).start()
+        pend[0] = 1
+        pend[1] = gi
+        pend[2] = mi
+        pend[3] = j
+
+    # Drain: the final grid step waits out the last in-flight store.
+    @pl.when((t == nsteps - 1) & (pend[0] == 1))
+    def _():
+        store(pend[1], pend[2], pend[3]).wait()
+        pend[0] = 0
+
+
+def gmm_scatter(
+    x: jax.Array,            # (G, C, D) bucket-padded rows (ragged fill)
+    w: jax.Array,            # (G // gpw, D, F)
+    offsets: jax.Array,      # (G,) int32 — bucket g's first output row
+    group_sizes: jax.Array,  # (G,) int32 — bucket g's live row count
+    *,
+    out_rows: int,
+    groups_per_weight: int = 1,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[offsets[g] : offsets[g]+count_g] = x[g, :count_g] @ w[g // gpw].
+
+    The compact mirror of ``gmm_gather``: same grouped matmul, but the
+    epilogue scatters result tiles into a flat ``(out_rows, F)`` array at
+    the scalar-prefetched per-bucket offsets instead of emitting the
+    padded ``(G, capacity, F)`` tensor. Output rows outside every live
+    segment are unspecified (zero where a partial tile spilled, garbage
+    where never written) — callers gather exclusively through the
+    dispatch metadata. See the module docstring for the non-overlap
+    contract on ``offsets``.
+    """
+    g, c, d = x.shape
+    f = w.shape[-1]
+    gpw = groups_per_weight
+    assert g == w.shape[0] * gpw, (g, w.shape, gpw)
+    assert offsets.shape == (g,), (offsets.shape, g)
+    bm, bn, bk = _tile(c, bm), _tile(f, bn), _tile(d, bk)
+    nk = d // bk
+    nmi, nj = c // bm, f // bn
+    out_pad = out_rows + bm  # a partial tile's spill never runs off the end
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(g, nmi, nj, nk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda gi, i, j, k, off, gs: (gi, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda gi, i, j, k, off, gs: (gi // gpw, k, j)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), x.dtype),
+            pltpu.SMEM((4,), jnp.int32),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _scatter_kernel,
+            nsteps=g * nmi * nj * nk, nk=nk,
+            bm=bm, bn=bn, r_max=out_pad - bm,
+        ),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((out_pad, f), x.dtype),
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), group_sizes.astype(jnp.int32), x, w)
+    return out[:out_rows]

@@ -93,3 +93,42 @@ def expert_ffn_gather_ref(
     return expert_ffn_ragged_ref(
         buckets, wg, wu, wd, group_sizes, groups_per_weight
     )
+
+
+def scatter_rows_ref(
+    y: jax.Array,            # (G, capacity, D) bucket-padded values
+    offsets: jax.Array,      # (G,)
+    group_sizes: jax.Array,  # (G,)
+    out_rows: int,
+) -> jax.Array:
+    """Inverse of ``gather_buckets_ref``: compact padded buckets back into
+    a flat ``(out_rows, D)`` array — bucket ``g``'s first ``count_g`` rows
+    land at ``[offsets[g], offsets[g] + count_g)``. Rows no live segment
+    covers are zero (the kernel leaves them unspecified; callers must not
+    read them either way). Differentiable in ``y``."""
+    g, cap, d = y.shape
+    idx = offsets[:, None] + jnp.arange(cap)[None, :]             # (G, cap)
+    mask = jnp.arange(cap)[None, :] < group_sizes[:, None]
+    flat = jnp.where(mask, idx, out_rows)                         # drop row
+    out = jnp.zeros((out_rows + 1, d), y.dtype)
+    out = out.at[flat.reshape(-1)].set(y.reshape(g * cap, d), mode="drop")
+    return out[:out_rows]
+
+
+def expert_ffn_compact_ref(
+    x: jax.Array,
+    wg: jax.Array,
+    wu: jax.Array,
+    wd: jax.Array,
+    offsets: jax.Array,
+    group_sizes: jax.Array,
+    capacity: int,
+    groups_per_weight: int = 1,
+):
+    """Oracle for the compact-output fused expert FFN (``gmm_scatter``
+    epilogue): the gather-FFN oracle scattered back to flat rows at the
+    same offsets — input and output share the ``(R, D)`` layout."""
+    y = expert_ffn_gather_ref(
+        x, wg, wu, wd, offsets, group_sizes, capacity, groups_per_weight
+    )
+    return scatter_rows_ref(y, offsets, group_sizes, x.shape[0])

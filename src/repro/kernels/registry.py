@@ -39,9 +39,20 @@ from repro.kernels.flash_decode.ops import (
     flash_decode_paged_op,
     flash_decode_partials_op,
 )
-from repro.kernels.gmm.ops import expert_ffn_gather as _expert_ffn_gather_op
-from repro.kernels.gmm.ops import expert_ffn_ragged as _expert_ffn_ragged_op
-from repro.kernels.gmm.ref import expert_ffn_gather_ref, expert_ffn_ragged_ref
+from repro.kernels.gmm.ops import (
+    expert_ffn_gather as _expert_ffn_gather_op,
+)
+from repro.kernels.gmm.ops import (
+    expert_ffn_gather_compact as _expert_ffn_gather_compact_op,
+)
+from repro.kernels.gmm.ops import (
+    expert_ffn_ragged as _expert_ffn_ragged_op,
+)
+from repro.kernels.gmm.ref import (
+    expert_ffn_compact_ref,
+    expert_ffn_gather_ref,
+    expert_ffn_ragged_ref,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -186,6 +197,37 @@ def _ffn_gather_bwd(cap, gpw, interpret, res, ct):
 _ffn_gather_kernel.defvjp(_ffn_gather_fwd, _ffn_gather_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _ffn_compact_kernel(cap, gpw, interpret, x, wg, wu, wd, offsets, group_sizes):
+    return _expert_ffn_gather_compact_op(
+        x, wg, wu, wd, offsets, group_sizes,
+        capacity=cap, groups_per_weight=gpw, interpret=interpret,
+    )
+
+
+def _ffn_compact_fwd(cap, gpw, interpret, x, wg, wu, wd, offsets, group_sizes):
+    y = _ffn_compact_kernel(cap, gpw, interpret, x, wg, wu, wd, offsets, group_sizes)
+    return y, (x, wg, wu, wd, offsets, group_sizes)
+
+
+def _ffn_compact_bwd(cap, gpw, interpret, res, ct):
+    # Reference-math backward: gather + FFN + scatter are plain jnp ops, so
+    # the cotangent flows back onto the flat rows through the same layout.
+    # The kernel forward leaves rows outside live segments unspecified
+    # while the reference zeroes them — consistent, because the reference
+    # scatter's vjp reads the cotangent only at live (bucket, position)
+    # pairs, exactly the rows downstream combines may touch.
+    x, wg, wu, wd, offs, gs = res
+    _, vjp = jax.vjp(
+        lambda a, b, c, d: expert_ffn_compact_ref(a, b, c, d, offs, gs, cap, gpw),
+        x, wg, wu, wd,
+    )
+    return (*vjp(ct), _zero_ct(offs), _zero_ct(gs))
+
+
+_ffn_compact_kernel.defvjp(_ffn_compact_fwd, _ffn_compact_bwd)
+
+
 def expert_ffn_from_rows(
     x: jax.Array,            # (R, D) flat token rows, bucket-contiguous
     wg: jax.Array,           # (G/gpw, D, F)
@@ -197,6 +239,7 @@ def expert_ffn_from_rows(
     capacity: int,
     groups_per_weight: int = 1,
     enabled: bool = True,
+    compact_out: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused dispatch-scatter grouped SwiGLU FFN.
@@ -204,13 +247,31 @@ def expert_ffn_from_rows(
     Bucket ``g``'s tokens are rows ``offsets[g] .. offsets[g]+count_g`` of
     the flat array; the kernel prologue gathers them tile-by-tile (dynamic-
     offset DMA), so the padded ``(G, capacity, D)`` dispatch buffer is never
-    written to HBM. Output keeps the bucket-padded ``(G, capacity, D)``
-    contract of ``expert_ffn`` (zero tails). Falls back to the reference
-    gather + einsum math when disabled or when shapes don't tile.
+    written to HBM. By default the output keeps the bucket-padded
+    ``(G, capacity, D)`` contract of ``expert_ffn`` (zero tails). With
+    ``compact_out=True`` the down-projection instead runs the
+    ``gmm_scatter`` epilogue: result tiles are stored back at the *same*
+    per-bucket offsets, emitting a flat rank-compacted ``(R, D)`` array —
+    the padded FFN output buffer is never written to HBM either, and the
+    caller combines through the dispatch metadata
+    (``collectives.combine_from_rows``). Rows outside live segments are
+    unspecified in the kernel output (zeroed by the reference path) and
+    must never be read. Falls back to the reference gather + einsum math
+    when disabled or when shapes don't tile.
     """
     d = x.shape[-1]
     f = wg.shape[-1]
     interpret = default_interpret() if interpret is None else interpret
+    if compact_out:
+        if enabled and can_gmm_gather(capacity, d, f, interpret):
+            return _ffn_compact_kernel(
+                capacity, groups_per_weight, interpret,
+                x, wg, wu, wd,
+                offsets.astype(jnp.int32), group_sizes.astype(jnp.int32),
+            )
+        return expert_ffn_compact_ref(
+            x, wg, wu, wd, offsets, group_sizes, capacity, groups_per_weight
+        )
     if enabled and can_gmm_gather(capacity, d, f, interpret):
         return _ffn_gather_kernel(
             capacity, groups_per_weight, interpret,

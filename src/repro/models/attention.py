@@ -178,20 +178,51 @@ def _flash_attend_eligible(q, k, ctx: ParallelCtx) -> bool:
     if ctx.mesh is None:
         return True
     # Under GSPMD the pallas_call must go through shard_map; the sharded
-    # dims (batch, heads) have to divide their mesh axes.
-    return nh % ctx.n_model == 0 and nkv % ctx.n_model == 0 and b % ctx.n_batch == 0
+    # dims (batch, heads) have to divide their mesh axes. When kv heads
+    # don't divide the model axis but the axis divides evenly *into* the
+    # GQA groups (tp % nkv == 0 — Mixtral-style GQA on a wide TP axis),
+    # the kv cache stays replicated and each rank slices the single kv
+    # head its query-head block attends to (`_flash_attend` kv-rep body).
+    tp = ctx.n_model
+    if nh % tp or b % ctx.n_batch:
+        return False
+    return nkv % tp == 0 or tp % nkv == 0
 
 
 def _flash_attend(q, k, v, causal: bool, window: int, ctx: ParallelCtx):
     if ctx.mesh is None:
         return registry.attend(q, k, v, causal=causal, window=window)
+    tp = ctx.n_model
+    nkv = k.shape[2]
     spec = P(ctx.batch_spec, None, ctx.model_axis, None)
+    if nkv % tp == 0:
+        return shard_map(
+            lambda qb, kb, vb: registry.attend(
+                qb, kb, vb, causal=causal, window=window
+            ),
+            mesh=ctx.mesh,
+            in_specs=(spec, spec, spec),
+            out_specs=spec,
+            check_vma=False,
+        )(q, k, v)
+
+    # kv-head-replicated variant (tp % nkv == 0): q heads shard the model
+    # axis; k/v stay replicated (qkv_proj's sharding constraint already
+    # dropped the non-dividing head axis) and each rank slices out the one
+    # kv head its contiguous query-head block maps to — rank r holds heads
+    # [r*nh/tp, (r+1)*nh/tp), all inside GQA group r // (tp // nkv).
+    def kv_rep_body(qb, kb, vb):
+        r = jax.lax.axis_index(ctx.model_axis)
+        i = r // (tp // nkv)
+        kb = jax.lax.dynamic_slice_in_dim(kb, i, 1, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(vb, i, 1, axis=2)
+        return registry.attend(qb, kb, vb, causal=causal, window=window)
+
+    kv_spec = P(ctx.batch_spec, None, None, None)
     return shard_map(
-        lambda qb, kb, vb: registry.attend(
-            qb, kb, vb, causal=causal, window=window
-        ),
+        kv_rep_body,
         mesh=ctx.mesh,
-        in_specs=(spec, spec, spec),
+        in_specs=(spec, kv_spec, kv_spec),
         out_specs=spec,
         check_vma=False,
     )(q, k, v)

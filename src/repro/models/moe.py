@@ -26,6 +26,7 @@ from repro.parallel.collectives import (
     bucket_capacity,
     bucket_combine,
     bucket_dispatch,
+    combine_from_rows,
     dispatch_metadata,
     ep_moe_shardmap,
     esp_expert_ffn,
@@ -125,8 +126,11 @@ def moe_esp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
     ):
         # Fused dispatch-gather path (single group, no mesh): the gather
         # GMM reads token rows straight from the flat activations via
-        # per-expert offsets — the (E, cap, d) dispatch buffer is never
-        # materialized.
+        # per-expert offsets, and the scatter epilogue (compact_out) writes
+        # the down-projection back at the same offsets — neither the
+        # (E, cap, d) dispatch buffer nor the padded FFN output is ever
+        # materialized; the combine gathers each kept copy's row through
+        # the same metadata.
         ids2 = ids.reshape(b * s, k)
         row_ids, offsets, counts, slots, keep = dispatch_metadata(ids2, e, cap)
         rows = x.reshape(b * s, d)[row_ids]
@@ -139,8 +143,11 @@ def moe_esp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
             counts,
             capacity=cap,
             enabled=True,
+            compact_out=True,
         )
-        out = bucket_combine(y, ids2, slots, keep, w.reshape(b * s, k))
+        out = combine_from_rows(
+            y, offsets[ids2] + slots, keep, w.reshape(b * s, k)
+        )
         return out.reshape(b, s, d), _aux(aux, ids, cfg)
 
     bspec = ctx.batch_spec

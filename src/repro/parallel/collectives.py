@@ -134,6 +134,27 @@ def bucket_combine(
     return jnp.einsum("nkd,nk->nd", vals, w)
 
 
+def combine_from_rows(
+    y: jax.Array,        # (R, d) flat compact expert outputs
+    rows: jax.Array,     # (n, k) flat output row per copy (junk when dropped)
+    keep: jax.Array,     # (n, k) capacity-survival mask
+    weights: jax.Array,  # (n, k) router weights
+) -> jax.Array:
+    """Metadata-driven combine for the compact FFN output: gather each kept
+    copy's row from the flat array and weighted-sum per token — the
+    ``(n_buckets, capacity, d)`` receive buffer of ``bucket_combine`` never
+    exists. Rows between live segments carry uninitialized garbage (the
+    scatter epilogue never writes them), so dropped copies must select zero
+    *before* any arithmetic: a ``where``, not a ``0 *`` weighting —
+    ``0 * NaN`` would poison the token."""
+    n, k = rows.shape
+    safe = jnp.clip(rows.reshape(-1), 0, y.shape[0] - 1)
+    vals = y[safe].reshape(n, k, -1)
+    vals = jnp.where(keep[..., None], vals, jnp.zeros_like(vals))
+    w = (weights * keep).astype(vals.dtype)
+    return jnp.einsum("nkd,nk->nd", vals, w)
+
+
 def scatter_counts(bucket_ids: jax.Array, n_buckets: int) -> jax.Array:
     """Per-bucket token counts (n, k) -> (n_buckets,); feeds the balancer."""
     return jnp.bincount(bucket_ids.reshape(-1), length=n_buckets)
@@ -219,6 +240,33 @@ def tiled_placement(n_experts: int, n_rows: int, n_slots: int, r_max: int = 4):
 # EP all-to-all under shard_map
 # ---------------------------------------------------------------------------
 
+def validate_ep_token_split(
+    b: int, s: int, n_batch: int, ep: int, decode: bool
+) -> None:
+    """Up-front shape validation for ``ep_moe_shardmap``.
+
+    The shard_map splits batch over the batch axes and (prefill) sequence
+    over the EP axis; a non-dividing shape either dies inside shard_map
+    with an opaque spec error or — worse — silently floor-truncates
+    ``n_tok = b*s // (n_batch * ep)`` and under-sizes ``bucket_capacity``
+    (the same failure class as the PR 2 capacity-floor bug). Fail loudly,
+    naming the offending shapes."""
+    if n_batch and b % n_batch:
+        raise ValueError(
+            f"ep_moe_shardmap: batch={b} does not divide the {n_batch}-way "
+            f"batch axis (seq={s}, ep={ep}, decode={decode}) — pad the "
+            f"batch or reshape the mesh"
+        )
+    if not decode and s % ep:
+        raise ValueError(
+            f"ep_moe_shardmap prefill splits the sequence over the EP "
+            f"axis: seq={s} does not divide ep={ep} (batch={b}, "
+            f"n_batch={n_batch}); b*s//(n_batch*ep) would floor-truncate "
+            f"the per-device token count and under-size bucket_capacity — "
+            f"pad the sequence to a multiple of {ep}"
+        )
+
+
 def ep_moe_shardmap(
     x: jax.Array,                 # (B, S, d) — seq will be split over model axis
     expert_ids: jax.Array,        # (B, S, k)
@@ -253,8 +301,9 @@ def ep_moe_shardmap(
     b, s, d = x.shape
     k = expert_ids.shape[-1]
     f = slot_weights["w_gate"].shape[-1]
+    validate_ep_token_split(b, s, ctx.n_batch, ep, decode)
     if decode:
-        n_tok = max(b // ctx.n_batch, 1)           # distinct tokens per EP group
+        n_tok = b // ctx.n_batch                   # distinct tokens per EP group
     else:
         n_tok = b * s // (ctx.n_batch * ep)        # tokens per device, seq split
     cap = bucket_capacity(n_tok, k, capacity_factor, total_slots)
@@ -262,10 +311,14 @@ def ep_moe_shardmap(
     # back-to-back per destination rank inside the statically-sized
     # exchange buffer — all_to_all needs equal splits, so wire bytes are
     # unchanged) and the gather GMM reads the received rows via per-bucket
-    # offsets. What the fusion removes is the receive side: no
-    # (spd, ep, cap, d) transpose/repack and no padded FFN input buffer is
-    # ever materialized. Padded bucket_dispatch remains the fallback when
-    # the kernels are off or shapes don't tile for the compiled kernel.
+    # offsets. The *combine* leg mirrors it: the scatter epilogue
+    # (compact_out) writes the down-projection back at the same offsets,
+    # the return all_to_all ships that compact buffer, and
+    # combine_from_rows gathers through the dest/posr/keep metadata — no
+    # (spd, ep, cap, d) transpose/repack and no padded FFN input *or*
+    # output buffer is ever materialized on either leg. Padded
+    # bucket_dispatch/bucket_combine remain the fallback when the kernels
+    # are off or shapes don't tile for the compiled kernel.
     fused = use_kernels and registry.can_gmm_gather(
         cap, d, f, registry.default_interpret()
     )
@@ -273,7 +326,12 @@ def ep_moe_shardmap(
 
     def dispatch_fused(xt, slots):
         """Rank-compacted send buffer + per-bucket metadata (no padding
-        between a rank's buckets; bucket order within a rank preserved)."""
+        between a rank's buckets; bucket order within a rank preserved).
+        ``dest``/``posr`` — each copy's destination rank and row inside
+        that rank's compacted block — also address the copy's row in the
+        *returned* compact FFN output (the scatter epilogue writes results
+        at the same offsets the prologue gathered from), so the combine
+        gathers through them directly."""
         n = xt.shape[0]
         _, _, kept, pos, keep = dispatch_metadata(slots, total_slots, cap)
         kept_rk = kept.reshape(ep, spd)
@@ -289,7 +347,7 @@ def ep_moe_shardmap(
         send = send.at[dest, posr].set(
             xt[jnp.repeat(jnp.arange(n), k)], mode="drop"
         )
-        return send, kept_rk, pos, keep
+        return send, kept_rk, pos, keep, dest, posr
 
     def body(x_blk, eid_blk, w_blk, wg, wu, wd, slot_of_, n_rep_):
         # x_blk: (B_loc, S_loc, d) — this device's token slice.
@@ -307,7 +365,7 @@ def ep_moe_shardmap(
             slots = jnp.where(owned[:, None], slots, total_slots + 1)
 
         if fused:
-            send, kept_rk, pos, keep = dispatch_fused(xt, slots)
+            send, kept_rk, pos, keep, dest, posr = dispatch_fused(xt, slots)
             recv = jax.lax.all_to_all(
                 send, axis, split_axis=0, concat_axis=0, tiled=False
             )
@@ -322,6 +380,12 @@ def ep_moe_shardmap(
             base = jnp.arange(ep, dtype=jnp.int32)[:, None] * (spd * cap)
             offsets_g = (roff + base).transpose(1, 0).reshape(-1)
             counts_g = cnt.transpose(1, 0).reshape(-1)
+            # compact_out: the scatter epilogue writes the down-projection
+            # back at offsets_g, so the flat (ep*spd*cap, d) result IS the
+            # return exchange buffer — segment r' goes straight back to
+            # source rank r', still bucket-compacted in *my* bucket order.
+            # No padded FFN output, no (spd, ep, cap, d) repack, and the
+            # receive side reads only live rows through dest/posr.
             y = registry.expert_ffn_from_rows(
                 recv.reshape(ep * spd * cap, d),
                 wg,
@@ -332,7 +396,17 @@ def ep_moe_shardmap(
                 capacity=cap,
                 groups_per_weight=ep,
                 enabled=True,
+                compact_out=True,
             )
+            back = jax.lax.all_to_all(
+                y.reshape(ep, spd * cap, d), axis,
+                split_axis=0, concat_axis=0, tiled=False,
+            )
+            # back[j] = rank j's compact outputs for my copies; each copy's
+            # row is dest*spd*cap + posr — the exact coordinates
+            # dispatch_fused scattered it to on the way out.
+            rows = (dest * (spd * cap) + posr).reshape(bl * sl, k)
+            out = combine_from_rows(back.reshape(ep * spd * cap, d), rows, keep, w)
         else:
             bufs, pos, keep = bucket_dispatch(xt, slots, total_slots, cap)
             # How full each outgoing bucket actually is — rides the same
@@ -365,10 +439,12 @@ def ep_moe_shardmap(
                 groups_per_weight=ep,
                 enabled=use_kernels,
             )
-        y = y.reshape(spd, ep, cap, d).transpose(1, 0, 2, 3)
-        back = jax.lax.all_to_all(y, axis, split_axis=0, concat_axis=0, tiled=False)
-        back = back.reshape(total_slots, cap, d)
-        out = bucket_combine(back, slots, pos, keep, w)
+            y = y.reshape(spd, ep, cap, d).transpose(1, 0, 2, 3)
+            back = jax.lax.all_to_all(
+                y, axis, split_axis=0, concat_axis=0, tiled=False
+            )
+            back = back.reshape(total_slots, cap, d)
+            out = bucket_combine(back, slots, pos, keep, w)
         if decode:
             out = jax.lax.psum(out, axis)  # gather owners' results everywhere
         return out.reshape(bl, sl, d)

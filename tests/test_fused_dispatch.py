@@ -1,9 +1,17 @@
-"""Fused dispatch-gather GMM path + EP capacity/placement bugfixes.
+"""Fused dispatch-gather/scatter GMM paths + EP capacity/placement bugfixes.
 
 Covers:
 * ``gmm_gather`` / ``gmm_dual_act_gather`` parity vs the gather oracles and
   vs the padded ragged kernels over the same buckets (the fused prologue
   must be a pure layout change, not a math change);
+* ``gmm_scatter`` (compact combine leg): the scatter epilogue's live rows
+  vs the padded-then-compacted oracle, the partial-tile spill overwrite
+  contract, ``compact_out`` FFN parity + gradients, and the metadata-driven
+  ``combine_from_rows`` vs ``bucket_combine`` (NaN-poisoned gap rows must
+  never leak — balanced and heavily skewed routing, with capacity drops);
+* ``validate_ep_token_split``: the prefill floor-truncation guard
+  (non-divisible ``b*s`` used to under-size ``bucket_capacity`` or die
+  inside shard_map with an opaque spec error);
 * ``dispatch_metadata`` consistency with ``bucket_dispatch`` (same slots/
   keep/counts; rebuilding padded buffers from the metadata reproduces the
   scattered buffers bit-for-bit);
@@ -29,22 +37,32 @@ import pytest
 
 from repro.configs import get_config, smoke
 from repro.kernels import registry
-from repro.kernels.gmm.ops import expert_ffn_gather, expert_ffn_ragged, gmm_gather_op
+from repro.kernels.gmm.ops import (
+    expert_ffn_gather,
+    expert_ffn_gather_compact,
+    expert_ffn_ragged,
+    gmm_gather_op,
+    gmm_scatter_op,
+)
 from repro.kernels.gmm.ragged import gmm_dual_act_gather
 from repro.kernels.gmm.ref import (
+    expert_ffn_compact_ref,
     expert_ffn_gather_ref,
     gather_buckets_ref,
     gmm_ragged_ref,
     gmm_ref,
+    scatter_rows_ref,
 )
 from repro.models.moe import moe_dense, moe_ep, moe_esp, moe_init
 from repro.parallel.collectives import (
     bucket_capacity,
     bucket_combine,
     bucket_dispatch,
+    combine_from_rows,
     dispatch_metadata,
     kept_counts,
     tiled_placement,
+    validate_ep_token_split,
 )
 from repro.parallel.ctx import ParallelCtx
 
@@ -220,6 +238,234 @@ def test_expert_ffn_from_rows_grad_matches_ref():
     gr = jax.grad(loss, argnums=(1, 2, 3, 4))(ref, x, wg, wu, wd)
     for a, b in zip(gk, gr):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# scatter-epilogue kernel (compact combine leg)
+# ---------------------------------------------------------------------------
+
+def _live_rows(counts, offsets, r):
+    live = np.zeros(r, bool)
+    for off, cnt in zip(np.asarray(offsets), np.asarray(counts)):
+        live[off : off + cnt] = True
+    return live
+
+
+@pytest.mark.parametrize(
+    "g,cap,d,f,counts",
+    [
+        (4, 16, 8, 12, [3, 0, 16, 5]),          # zero group, full group
+        (3, 96, 64, 160, [1, 95, 40]),          # non-128 C/D/F
+        (2, 128, 128, 256, [128, 17]),          # MXU-native tiles
+        (5, 24, 48, 40, [24, 0, 0, 7, 2]),      # multiple empty groups
+    ],
+)
+def test_gmm_scatter_matches_ref(g, cap, d, f, counts):
+    """The scatter epilogue compacts the down-projection back to flat rows
+    at the per-bucket offsets — live rows must match the padded ragged
+    matmul scattered by the reference."""
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 2)
+    x = jax.random.normal(ks[0], (g, cap, d))
+    w = jax.random.normal(ks[1], (g, d, f)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    out_rows = max(r, 1)
+    out = np.asarray(gmm_scatter_op(x, w, offsets, gs, out_rows=out_rows))
+    ref = np.asarray(
+        scatter_rows_ref(gmm_ragged_ref(x, w, gs), offsets, gs, out_rows)
+    )
+    live = _live_rows(counts, offsets, out_rows)
+    np.testing.assert_allclose(out[live], ref[live], rtol=1e-5, atol=1e-5)
+
+
+def test_gmm_scatter_partial_tile_spill_is_overwritten():
+    """A partial tile's bm-row store spills masked zeros past its bucket's
+    segment into the *next* bucket's rows; grid-ordered stores must
+    overwrite the spill with the later bucket's real rows (the
+    overlap-overwrite contract)."""
+    g, cap, d, f = 3, 16, 8, 12
+    counts = [5, 3, 7]  # contiguous, none a multiple of the 16-row tile
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 2)
+    x = jax.random.normal(ks[0], (g, cap, d))
+    w = jax.random.normal(ks[1], (g, d, f)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    out = np.asarray(gmm_scatter_op(x, w, offsets, gs, out_rows=r))
+    ref = np.asarray(scatter_rows_ref(gmm_ragged_ref(x, w, gs), offsets, gs, r))
+    live = _live_rows(counts, offsets, r)
+    assert live.all()  # contiguous segments tile the array fully
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("gpw", [2, 3])
+def test_gmm_scatter_groups_per_weight(gpw):
+    gw, cap, d, f = 2, 16, 24, 20
+    g = gw * gpw
+    counts = [(3 * i) % (cap + 1) for i in range(g)]
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 2)
+    x = jax.random.normal(ks[0], (g, cap, d))
+    w = jax.random.normal(ks[1], (gw, d, f)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    out = np.asarray(
+        gmm_scatter_op(x, w, offsets, gs, out_rows=r, groups_per_weight=gpw)
+    )
+    ref = np.asarray(
+        scatter_rows_ref(
+            gmm_ragged_ref(x, w, gs, groups_per_weight=gpw), offsets, gs, r
+        )
+    )
+    live = _live_rows(counts, offsets, r)
+    np.testing.assert_allclose(out[live], ref[live], rtol=1e-5, atol=1e-5)
+
+
+def test_expert_ffn_compact_matches_padded_live_rows():
+    """compact_out must be a pure layout change: live rows equal the padded
+    gather path's bucket rows (and the pure-jnp compact oracle)."""
+    gw, gpw, cap, d, f = 2, 2, 16, 8, 12
+    g = gw * gpw
+    counts = [7, 0, 16, 2]
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 4)
+    x = jax.random.normal(ks[0], (r, d))
+    wg = jax.random.normal(ks[1], (gw, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (gw, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (gw, f, d)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    compact = np.asarray(
+        expert_ffn_gather_compact(
+            x, wg, wu, wd, offsets, gs, capacity=cap, groups_per_weight=gpw
+        )
+    )
+    padded = np.asarray(
+        expert_ffn_gather(
+            x, wg, wu, wd, offsets, gs, capacity=cap, groups_per_weight=gpw
+        )
+    )
+    oracle = np.asarray(
+        expert_ffn_compact_ref(x, wg, wu, wd, offsets, gs, cap, gpw)
+    )
+    for gi, cnt in enumerate(counts):
+        off = int(np.asarray(offsets)[gi])
+        np.testing.assert_allclose(
+            compact[off : off + cnt], padded[gi, :cnt], rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            compact[off : off + cnt], oracle[off : off + cnt],
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+def test_expert_ffn_compact_grad_matches_ref():
+    """Kernel forward + reference backward (custom_vjp) through the compact
+    scatter epilogue — gradients flow back onto the flat rows/weights."""
+    g, cap, d, f = 3, 16, 8, 12
+    counts = [4, 16, 0]
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 4)
+    x = jax.random.normal(ks[0], (r, d))
+    wg = jax.random.normal(ks[1], (g, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (g, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (g, f, d)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    live = jnp.asarray(_live_rows(counts, offsets, r))[:, None]
+
+    def loss(fn, x, wg, wu, wd):
+        # Square only live rows: gap rows are unspecified kernel output.
+        return ((fn(x, wg, wu, wd) * live) ** 2).sum()
+
+    kern = lambda *a: registry.expert_ffn_from_rows(
+        *a, offsets, gs, capacity=cap, enabled=True, compact_out=True
+    )
+    ref = lambda *a: expert_ffn_compact_ref(*a, offsets, gs, cap)
+    gk = jax.grad(loss, argnums=(1, 2, 3, 4))(kern, x, wg, wu, wd)
+    gr = jax.grad(loss, argnums=(1, 2, 3, 4))(ref, x, wg, wu, wd)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# metadata-driven combine (combine_from_rows)
+# ---------------------------------------------------------------------------
+
+def test_combine_from_rows_matches_bucket_combine():
+    """Gathering the compacted rows through offsets[bucket] + slot must
+    reproduce the padded bucket_combine exactly — including capacity drops
+    — even when every gap row of the flat array is NaN-poisoned (dropped
+    copies select zero before any arithmetic)."""
+    n, k, buckets, cap = 24, 2, 5, 4   # cap small -> real capacity drops
+    ks = jax.random.split(RNG, 3)
+    ids = jax.random.randint(ks[0], (n, k), 0, buckets)
+    w = jax.random.uniform(ks[1], (n, k))
+    row_ids, offsets, counts, slots, keep = dispatch_metadata(ids, buckets, cap)
+    assert not bool(keep.all())  # the cell must exercise drops
+    y_pad = jax.random.normal(ks[2], (buckets, cap, 8))
+    # Build the compact array bucket_combine's padded buffer corresponds
+    # to, poisoning every row outside a live segment.
+    r = n * k
+    live = _live_rows(np.asarray(counts), np.asarray(offsets), r)
+    y_flat = jnp.full((r, 8), jnp.nan)
+    for g in range(buckets):
+        off, cnt = int(offsets[g]), int(counts[g])
+        y_flat = y_flat.at[off : off + cnt].set(y_pad[g, :cnt])
+    assert not bool(jnp.isnan(y_flat[jnp.asarray(live)]).any())
+    ref = bucket_combine(y_pad, ids, slots, keep, w)
+    out = combine_from_rows(y_flat, offsets[ids] + slots, keep, w)
+    assert bool(jnp.isfinite(out).all()), "gap garbage leaked into combine"
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6)
+
+
+def test_compact_combine_skewed_parity():
+    """Full dispatch->FFN->combine pipeline parity, padded vs compact, at
+    heavily skewed routing with capacity overflow — the regime the compact
+    leg exists for."""
+    e, cap, d, f = 6, 8, 8, 12
+    n, k = 40, 2
+    ks = jax.random.split(RNG, 6)
+    # ~70% of copies hammer expert 0; a couple of experts stay empty.
+    hot = jax.random.bernoulli(ks[0], 0.7, (n, k))
+    ids = jnp.where(hot, 0, jax.random.randint(ks[1], (n, k), 0, 3))
+    x = jax.random.normal(ks[2], (n, d))
+    w = jax.random.uniform(ks[3], (n, k))
+    wg = jax.random.normal(ks[4], (e, d, f)) * 0.1
+    wu = jax.random.normal(ks[5], (e, d, f)) * 0.1
+    wd = jax.random.normal(ks[0], (e, f, d)) * 0.1
+    row_ids, offsets, counts, slots, keep = dispatch_metadata(ids, e, cap)
+    assert int(counts[0]) == cap and not bool(keep.all())  # overflow happened
+    # Padded pipeline (the fallback the fused path must match bit-for-bit).
+    bufs, slots_b, keep_b = bucket_dispatch(x, ids, e, cap)
+    y_pad = expert_ffn_ragged(bufs, wg, wu, wd, counts)
+    ref = bucket_combine(y_pad, ids, slots_b, keep_b, w)
+    # Compact pipeline: gather-prologue FFN + scatter epilogue + metadata
+    # combine. No padded buffer on either side.
+    y_flat = registry.expert_ffn_from_rows(
+        x[row_ids], wg, wu, wd, offsets, counts,
+        capacity=cap, enabled=True, compact_out=True,
+    )
+    out = combine_from_rows(y_flat, offsets[ids] + slots, keep, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# EP token-split validation (floor-truncation regression)
+# ---------------------------------------------------------------------------
+
+def test_validate_ep_token_split():
+    # valid splits pass silently
+    validate_ep_token_split(4, 8, 2, 4, decode=False)
+    validate_ep_token_split(8, 1, 2, 4, decode=True)
+    validate_ep_token_split(3, 4, 1, 4, decode=False)   # n_batch=1: any b
+    # prefill: seq must divide the EP axis (b*s // (n_batch*ep) would
+    # floor-truncate and under-size bucket_capacity)
+    with pytest.raises(ValueError, match="seq=7 does not divide ep=4"):
+        validate_ep_token_split(4, 7, 2, 4, decode=False)
+    # batch must divide the batch axes, prefill and decode alike
+    with pytest.raises(ValueError, match="batch=3"):
+        validate_ep_token_split(3, 8, 2, 4, decode=False)
+    with pytest.raises(ValueError, match="batch=5"):
+        validate_ep_token_split(5, 1, 2, 4, decode=True)
+    # decode never splits the sequence
+    validate_ep_token_split(4, 1, 2, 4, decode=True)
 
 
 # ---------------------------------------------------------------------------
@@ -460,3 +706,25 @@ def test_moe_ep_fused_parity(moe_cfg, shape):
     np.testing.assert_allclose(
         np.asarray(outs["on"]), np.asarray(dense), rtol=1e-5, atol=1e-5
     )
+
+
+def test_moe_ep_fused_compact_grad(moe_cfg):
+    """Gradients through the full fused EP path — compact scatter epilogue
+    (custom_vjp), return all_to_all, and metadata combine — must match the
+    dense oracle."""
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    rng = jax.random.PRNGKey(0)
+    p = moe_init(rng, moe_cfg)
+    x = jax.random.normal(rng, (2, 8, moe_cfg.d_model)) * 0.5
+    ctx = ParallelCtx(mesh=mesh, capacity_factor=8.0, use_kernels=True)
+    gd = jax.grad(lambda p_: moe_dense(p_, x, moe_cfg, CTX_OFF)[0].sum())(p)
+    with mesh:
+        ge = jax.jit(
+            jax.grad(lambda p_: moe_ep(p_, x, moe_cfg, ctx)[0].sum())
+        )(p)
+    for key in ("w_gate", "w_up", "w_down", "router"):
+        np.testing.assert_allclose(
+            np.asarray(gd[key]), np.asarray(ge[key]), rtol=1e-4, atol=1e-5
+        )

@@ -63,8 +63,10 @@ def test_ep_esp_decode_parity_8dev():
 
 
 def test_ep_fused_dispatch_parity_8dev():
-    """Fused rank-compacted dispatch (kernels on, interpret mode) across a
-    real 4-way all_to_all: prefill + decode (ownership sentinel) + a
+    """Fused rank-compacted dispatch + compact combine (kernels on,
+    interpret mode) across a real 4-way all_to_all: both legs ship the
+    compact exchange buffer and the combine gathers through dest/posr/keep
+    metadata. Prefill + decode (ownership sentinel + psum) + a
     non-divisible expert count (tiled shadow slots), all vs the dense
     oracle."""
     out = _run(
@@ -100,8 +102,122 @@ def test_ep_fused_dispatch_parity_8dev():
     assert "FUSED_OK" in out
 
 
+def test_ep_compact_combine_skewed_and_validation_8dev():
+    """Combine-leg coverage the dense-oracle cells can't give: (1) fused
+    vs padded ep_moe_shardmap parity under *heavily skewed* hand-crafted
+    routing (capacity drops on both paths must agree bit-for-bit over a
+    real 4-way all_to_all); (2) the prefill token-split validation raises
+    a clear error instead of floor-truncating bucket_capacity."""
+    out = _run(
+        """
+        import jax, jax.numpy as jnp
+        from repro.parallel.collectives import ep_moe_shardmap, uniform_placement
+        from repro.parallel.ctx import ParallelCtx
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
+        ep = 4
+        e, d, f, k = 8, 8, 16, 2
+        b, s = 4, 8
+        rng = jax.random.PRNGKey(0)
+        ks = jax.random.split(rng, 6)
+        x = jax.random.normal(ks[0], (b, s, d)) * 0.5
+        # ~75% of copies hammer expert 0 (one device's slots); rest spread.
+        hot = jax.random.bernoulli(ks[1], 0.75, (b, s, k))
+        ids = jnp.where(hot, 0, jax.random.randint(ks[2], (b, s, k), 0, e))
+        w = jax.random.uniform(ks[3], (b, s, k))
+        w = w / w.sum(-1, keepdims=True)
+        slot_weights = {
+            "w_gate": jax.random.normal(ks[4], (e, d, f)) * 0.1,
+            "w_up": jax.random.normal(ks[5], (e, d, f)) * 0.1,
+            "w_down": jax.random.normal(ks[0], (e, f, d)) * 0.1,
+        }
+        slot_of, n_rep = uniform_placement(e, e)
+        outs = {}
+        for name, uk in (("padded", False), ("fused", True)):
+            ctx = ParallelCtx(mesh=mesh, use_kernels=uk)
+            with mesh:
+                outs[name] = jax.jit(lambda x_, i_, w_: ep_moe_shardmap(
+                    x_, i_, w_, slot_weights, slot_of, n_rep, ctx,
+                    capacity_factor=1.0,  # tight capacity -> real drops
+                    slots_per_device=e // ep))(x, ids, w)
+        err = float(jnp.max(jnp.abs(outs["fused"] - outs["padded"])))
+        assert err < 1e-5, ("skewed fused-vs-padded", err)
+        # decode-shape ownership psum under the same skew
+        xd = jax.random.normal(ks[0], (8, 1, d)) * 0.5
+        idd = jnp.where(jax.random.bernoulli(ks[1], 0.75, (8, 1, k)), 0,
+                        jax.random.randint(ks[2], (8, 1, k), 0, e))
+        wd_ = jax.random.uniform(ks[3], (8, 1, k))
+        for name, uk in (("padded", False), ("fused", True)):
+            ctx = ParallelCtx(mesh=mesh, use_kernels=uk)
+            with mesh:
+                outs[name] = jax.jit(lambda x_, i_, w_: ep_moe_shardmap(
+                    x_, i_, w_, slot_weights, slot_of, n_rep, ctx,
+                    capacity_factor=1.0, slots_per_device=e // ep,
+                    decode=True))(xd, idd, wd_)
+        err = float(jnp.max(jnp.abs(outs["fused"] - outs["padded"])))
+        assert err < 1e-5, ("skewed decode fused-vs-padded", err)
+        # token-split validation: seq not divisible by ep must raise the
+        # named error, not die inside shard_map / silently floor-truncate
+        ctx = ParallelCtx(mesh=mesh, use_kernels=True)
+        xbad = jax.random.normal(rng, (4, 7, d))
+        try:
+            with mesh:
+                ep_moe_shardmap(xbad, ids[:, :7], w[:, :7], slot_weights,
+                                slot_of, n_rep, ctx, 1.0, e // ep)
+        except ValueError as exc:
+            assert "seq=7 does not divide ep=4" in str(exc), exc
+        else:
+            raise AssertionError("non-divisible seq did not raise")
+        print("SKEWED_OK")
+        """
+    )
+    assert "SKEWED_OK" in out
+
+
+def test_gqa_kv_replicated_flash_attention_8dev():
+    """Mixtral-style GQA on a wide TP axis (n_kv_heads=2 < tp=4,
+    tp % nkv == 0): flash attention must take the kv-head-replicated
+    shard_map variant instead of silently falling back to einsum, and
+    match the einsum fallback. nkv=3 (tp % nkv != 0) must stay on the
+    fallback."""
+    out = _run(
+        """
+        import jax, jax.numpy as jnp, dataclasses
+        from repro.configs import get_config, smoke
+        from repro.models import attention as A
+        from repro.parallel.ctx import ParallelCtx
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
+        cfg = dataclasses.replace(smoke(get_config("llama3.2-1b")),
+                                  n_heads=8, n_kv_heads=2)
+        p = A.attn_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model)) * 0.3
+        ctx_on = ParallelCtx(mesh=mesh, use_kernels=True)
+        ctx_off = ParallelCtx(mesh=mesh, use_kernels=False)
+        q = jnp.zeros((4, 16, 8, cfg.head_dim_))
+        kk = jnp.zeros((4, 16, 2, cfg.head_dim_))
+        assert A._flash_attend_eligible(q, kk, ctx_on), "kv-rep not eligible"
+        with mesh:
+            on = jax.jit(lambda p, x: A.attention(p, x, cfg, ctx_on))(p, x)
+            off = jax.jit(lambda p, x: A.attention(p, x, cfg, ctx_off))(p, x)
+        err = float(jnp.max(jnp.abs(on - off)))
+        assert err < 2e-5, ("kv-rep parity", err)
+        # tp not a multiple of nkv: ineligible, einsum fallback unchanged
+        q3 = jnp.zeros((4, 16, 12, cfg.head_dim_))
+        k3 = jnp.zeros((4, 16, 3, cfg.head_dim_))
+        assert not A._flash_attend_eligible(q3, k3, ctx_on)
+        print("KVREP_OK")
+        """
+    )
+    assert "KVREP_OK" in out
+
+
 def test_ep_gradient_parity_8dev():
-    """EP dispatch must be differentiable and match dense gradients."""
+    """EP dispatch must be differentiable and match dense gradients — on
+    both the padded fallback (kernels off) and the fused compact path
+    (kernels on: gather prologue + scatter epilogue custom_vjp, return
+    all_to_all adjoint, combine_from_rows gather vjp across real rank
+    segments — a 1x1 mesh can't exercise any of that)."""
     out = _run(
         """
         import jax, jax.numpy as jnp, dataclasses
@@ -110,20 +226,21 @@ def test_ep_gradient_parity_8dev():
         from repro.parallel.ctx import ParallelCtx
         from repro.launch.mesh import make_mesh_compat
         mesh = make_mesh_compat((2, 4), ("data", "model"))
-        ctx = ParallelCtx(mesh=mesh, capacity_factor=8.0)
         cfg = dataclasses.replace(smoke(get_config("dbrx-132b")),
                                   n_experts=4, experts_per_token=2)
         rng = jax.random.PRNGKey(0)
         p = moe_init(rng, cfg)
         x = jax.random.normal(rng, (4, 8, cfg.d_model)) * 0.5
-        loss_d = lambda p: moe_dense(p, x, cfg, ctx)[0].sum()
-        loss_e = lambda p: moe_ep(p, x, cfg, ctx)[0].sum()
-        gd = jax.grad(loss_d)(p)
-        with mesh:
-            ge = jax.jit(jax.grad(loss_e))(p)
-        for k in ("w_gate", "w_up", "w_down", "router"):
-            err = float(jnp.max(jnp.abs(gd[k] - ge[k])))
-            assert err < 1e-4, (k, err)
+        gd = jax.grad(lambda p: moe_dense(
+            p, x, cfg, ParallelCtx(capacity_factor=8.0))[0].sum())(p)
+        for uk in (False, True):
+            ctx = ParallelCtx(mesh=mesh, capacity_factor=8.0, use_kernels=uk)
+            loss_e = lambda p: moe_ep(p, x, cfg, ctx)[0].sum()
+            with mesh:
+                ge = jax.jit(jax.grad(loss_e))(p)
+            for k in ("w_gate", "w_up", "w_down", "router"):
+                err = float(jnp.max(jnp.abs(gd[k] - ge[k])))
+                assert err < 1e-4, (uk, k, err)
         print("GRAD_OK")
         """
     )

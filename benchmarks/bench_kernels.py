@@ -25,7 +25,12 @@ are directly comparable:
   ``gmm_scatter`` epilogue**: the down-projection writes result tiles back
   at the same per-bucket offsets, so neither the padded input nor the
   padded output buffer exists; ``combine_from_rows`` gathers each kept
-  copy through the dispatch metadata.
+  copy through the dispatch metadata — but the ``(G, C, F)`` *hidden*
+  tensor between the two kernels still round-trips HBM;
+* ``gmm_fused_ffn_combine`` — **one kernel for all three matmuls**
+  (``gmm_fused_ffn``): gather prologue, SwiGLU hidden tiles held in VMEM
+  accumulators, down-projection, scatter epilogue. The padded hidden
+  tensor never exists — its HBM-byte column is exactly zero.
 
 Besides wall-clock, each row reports the FLOP accounting (``padded_gflop``
 = what a capacity-padded pass must execute, ``achieved_gflop`` = useful
@@ -34,11 +39,14 @@ runs at tile granularity), ``dispatch_hbm_mb`` — the bytes the dispatch
 stage moves through HBM (padded: write + read of ``G*C*d``; fused: a
 row-granular write of the ``R = sum(counts)`` compacted rows + a
 tile-granular gather-DMA read, ``sum(ceil(count/bm)*bm)`` rows — the same
-ceil-tile convention as ``exec_gflop``) — and ``combine_hbm_mb``, the
+ceil-tile convention as ``exec_gflop``), ``combine_hbm_mb``, the
 mirror accounting for the combine leg (padded paths write + read the
 ``G*C*d`` FFN output; the compact path's scatter epilogue writes
-tile-granular rows and the metadata combine gathers the ``R`` live rows).
-``utilization`` = achieved/executed FLOPs.
+tile-granular rows and the metadata combine gathers the ``R`` live rows),
+and ``hidden_hbm_mb`` — the bytes the ``(G, C, F)`` hidden tensor between
+the SwiGLU front half and the down-projection moves (write + read for
+every two-kernel path; **0** for ``gmm_fused_ffn_combine``, where the
+hidden tile never leaves VMEM). ``utilization`` = achieved/executed FLOPs.
 
 Shape cells cover balanced routing (every bucket full — the fused paths
 must not lose here) and zipf-skewed routing (fig. 6 imbalance — where
@@ -48,11 +56,19 @@ Usage::
 
     PYTHONPATH=src python benchmarks/bench_kernels.py [--out BENCH_kernels.json]
     PYTHONPATH=src python benchmarks/bench_kernels.py --smoke   # CI gate
+    PYTHONPATH=src python benchmarks/bench_kernels.py --check BENCH_kernels.json
 
 ``--smoke`` runs one tiny FFN cell + one tiny decode cell with 2
 iterations (interpret mode on CPU) and exits non-zero on any parity
 failure — a kernel-dispatch or paged-decode regression fails the gate
 even when the full parity suite isn't run.
+
+``--check BASELINE.json`` recomputes every **deterministic** column (shape
+metadata, FLOP accounting, per-leg HBM-byte accounting — not wall-clock,
+not backend) from the same seeded routing draws and fails with a readable
+diff if any drifts from the committed baseline — a PR that silently
+re-pads a leg (or re-materializes the hidden tensor) turns CI red without
+running a single kernel.
 
 On CPU the Pallas paths execute in interpret mode (kernel *semantics*, not
 kernel speed) — wall-clock comparisons are only meaningful on TPU, and the
@@ -76,8 +92,9 @@ import numpy as np
 
 from repro.kernels.flash_decode.ops import flash_decode_op, flash_decode_paged_op
 from repro.kernels.flash_decode.ref import decode_ref
-from repro.kernels.gmm.gmm import gmm, gmm_dual_act
+from repro.kernels.gmm.gmm import _tile, gmm, gmm_dual_act
 from repro.kernels.gmm.ops import (
+    expert_ffn_fused,
     expert_ffn_gather,
     expert_ffn_gather_compact,
     expert_ffn_ragged,
@@ -136,6 +153,111 @@ def _ids_from_counts(counts: np.ndarray) -> np.ndarray:
     return rng.permutation(ids)
 
 
+def ffn_cell_accounting(name, g, c, d, f, balanced):
+    """Deterministic columns of one FFN shape cell — seeded routing draw,
+    FLOP model, and per-leg HBM-byte model. No kernels run; this is what
+    ``--check`` recomputes against the committed baseline."""
+    counts = (
+        np.full(g, c, np.int64) if balanced else _skewed_counts(g, c, seed=g * c)
+    )
+    n_tok = int(counts.sum())
+    flop_per_row = 6 * d * f  # 3 matmuls, 2 flop/MAC
+    padded_gf = g * c * flop_per_row / 1e9
+    achieved_gf = n_tok * flop_per_row / 1e9
+    # The kernels' actual row tile: the largest divisor of the capacity
+    # <= BM (min(BM, c) agrees only when that happens to divide c).
+    bm = _tile(c, BM)
+    ragged_rows = sum(math.ceil(cnt / bm) * bm for cnt in counts)
+    ragged_exec_gf = ragged_rows * flop_per_row / 1e9
+    row_bytes = d * np.dtype(np.float32).itemsize
+    hidden_row_bytes = f * np.dtype(np.float32).itemsize
+    # Padded legs: scatter out + read in of the full (G, C, ·) buffer.
+    padded_leg_mb = 2 * g * c * row_bytes / 1e6
+    # Fused legs are half row-granular (XLA scatter/gather of the
+    # compacted rows), half tile-granular (the kernel's dynamic-offset
+    # DMAs move whole (bm, ·) tiles, padding included — same ceil-tile
+    # convention as exec_gflop): dispatch writes n_tok rows and the
+    # gather prologue reads ragged_rows; the scatter epilogue writes
+    # ragged_rows and the combine gathers n_tok.
+    fused_dispatch_mb = (n_tok + ragged_rows) * row_bytes / 1e6
+    compact_combine_mb = (ragged_rows + n_tok) * row_bytes / 1e6
+    # Hidden leg: every two-kernel path writes the (G, C, F) SwiGLU output
+    # and the down-projection reads it back (the Pallas pipeline moves all
+    # blocks of a BlockSpec-driven operand, dead tiles included, so this
+    # leg is full-size even for the ragged kernels). The single-kernel
+    # fused path keeps the hidden tile in VMEM: exactly zero.
+    hidden_mb = 2 * g * c * hidden_row_bytes / 1e6
+
+    def acc(exec_gf, dispatch_mb, combine_mb, hidden):
+        return {
+            "exec_gflop": round(exec_gf, 4),
+            "utilization": round(achieved_gf / exec_gf, 4) if exec_gf else 1.0,
+            "dispatch_hbm_mb": round(dispatch_mb, 4),
+            "combine_hbm_mb": round(combine_mb, 4),
+            "hidden_hbm_mb": round(hidden, 4),
+        }
+
+    meta = {
+        "shape": name,
+        "G": g,
+        "C": c,
+        "D": d,
+        "F": f,
+        "routing": "balanced" if balanced else "skewed",
+        "tokens_routed": n_tok,
+        "tokens_padded": g * c,
+        "group_sizes": counts.tolist(),
+        "padded_gflop": round(padded_gf, 4),
+        "achieved_gflop": round(achieved_gf, 4),
+    }
+    paths = {
+        "einsum_padded_dispatch": acc(
+            padded_gf, padded_leg_mb, padded_leg_mb, hidden_mb
+        ),
+        "gmm_padded_dispatch": acc(
+            padded_gf, padded_leg_mb, padded_leg_mb, hidden_mb
+        ),
+        "gmm_ragged_padded_dispatch": acc(
+            ragged_exec_gf, padded_leg_mb, padded_leg_mb, hidden_mb
+        ),
+        "gmm_gather_fused_dispatch": acc(
+            ragged_exec_gf, fused_dispatch_mb, padded_leg_mb, hidden_mb
+        ),
+        "gmm_compact_fused_combine": acc(
+            ragged_exec_gf, fused_dispatch_mb, compact_combine_mb, hidden_mb
+        ),
+        "gmm_fused_ffn_combine": acc(
+            ragged_exec_gf, fused_dispatch_mb, compact_combine_mb, 0.0
+        ),
+    }
+    return counts, meta, paths
+
+
+def decode_cell_accounting(name, b, max_seq, lengths, kv, h, hd, bs):
+    """Deterministic columns of one decode cell (KV HBM-byte model)."""
+    nb = -(-max_seq // bs)
+    row_bytes = 2 * kv * hd * np.dtype(np.float32).itemsize  # k + v
+    dense_mb = b * nb * bs * row_bytes / 1e6
+    live_pages = sum(-(-l // bs) for l in lengths)
+    paged_mb = live_pages * bs * row_bytes / 1e6
+    meta = {
+        "shape": name,
+        "B": b,
+        "max_seq": max_seq,
+        "page_size": bs,
+        "lengths": list(lengths),
+        "tokens_live": int(sum(lengths)),
+        "tokens_streamed_dense": b * nb * bs,
+        "tokens_streamed_paged": live_pages * bs,
+    }
+    paths = {
+        "flash_decode_dense_masked": {"kv_hbm_mb": round(dense_mb, 4)},
+        "flash_decode_paged": {"kv_hbm_mb": round(paged_mb, 4)},
+    }
+    ratio = round(dense_mb / paged_mb, 3)
+    return meta, paths, ratio
+
+
 def _time(fn, *args, iters: int = 20, warmup: int = 3) -> float:
     """Best-of-N wall time: the minimum is the standard noise-robust
     estimator on shared/virtualized hosts (medians here swing 2-3x with
@@ -156,9 +278,7 @@ def run(iters: int = 20, smoke: bool = False) -> list[dict]:
     rows = []
     for name, g, c, d, f, balanced in SMOKE_SHAPES if smoke else SHAPES:
         ks = jax.random.split(jax.random.PRNGKey(zlib.crc32(name.encode())), 4)
-        counts = (
-            np.full(g, c, np.int64) if balanced else _skewed_counts(g, c, seed=g * c)
-        )
+        counts, meta, path_acc = ffn_cell_accounting(name, g, c, d, f, balanced)
         n_tok = int(counts.sum())
         ids = jnp.asarray(_ids_from_counts(counts))[:, None]        # (n, 1)
         xt = jax.random.normal(ks[0], (n_tok, d), dtype)            # token stream
@@ -205,6 +325,15 @@ def run(iters: int = 20, smoke: bool = False) -> list[dict]:
             )
             return combine_from_rows(y, offsets[ids] + slots, keep, wt)
 
+        @jax.jit
+        def fused_ffn_fn(xt, ids, wg, wu, wd):
+            row_ids, offsets, gs, slots, keep = dispatch_metadata(ids, g, c)
+            y = expert_ffn_fused(
+                xt[row_ids], wg, wu, wd, offsets, gs,
+                capacity=c, interpret=interpret,
+            )
+            return combine_from_rows(y, offsets[ids] + slots, keep, wt)
+
         # Cross-check all paths before timing — the outputs are per-token
         # combined results, so padded-vs-compact divergence on *either* leg
         # (dispatch or combine) fails here.
@@ -213,74 +342,27 @@ def run(iters: int = 20, smoke: bool = False) -> list[dict]:
             ("ragged", ragged_fn),
             ("fused", fused_fn),
             ("compact", compact_fn),
+            ("fused_ffn", fused_ffn_fn),
         ):
             np.testing.assert_allclose(
                 np.asarray(fn(xt, ids, wg, wu, wd)), ref,
                 rtol=2e-4, atol=2e-4, err_msg=f"{name}:{label} parity",
             )
 
-        flop_per_row = 6 * d * f  # 3 matmuls, 2 flop/MAC
-        padded_gf = g * c * flop_per_row / 1e9
-        achieved_gf = n_tok * flop_per_row / 1e9
-        bm = min(BM, c)
-        ragged_rows = sum(math.ceil(cnt / bm) * bm for cnt in counts)
-        ragged_exec_gf = ragged_rows * flop_per_row / 1e9
-        row_bytes = d * np.dtype(np.float32).itemsize
-        padded_dispatch_mb = 2 * g * c * row_bytes / 1e6   # scatter out + read in
-        # Fused legs are half row-granular (XLA scatter/gather of the
-        # compacted rows), half tile-granular (the kernel's dynamic-offset
-        # DMAs move whole (bm, ·) tiles, padding included — same ceil-tile
-        # convention as exec_gflop): dispatch writes n_tok rows and the
-        # gather prologue reads ragged_rows; the scatter epilogue writes
-        # ragged_rows and the combine gathers n_tok.
-        fused_dispatch_mb = (n_tok + ragged_rows) * row_bytes / 1e6
-        padded_combine_mb = 2 * g * c * row_bytes / 1e6
-        compact_combine_mb = (ragged_rows + n_tok) * row_bytes / 1e6
-
-        t_e = _time(einsum_fn, xt, ids, wg, wu, wd, iters=iters)
-        t_p = _time(padded_fn, xt, ids, wg, wu, wd, iters=iters)
-        t_r = _time(ragged_fn, xt, ids, wg, wu, wd, iters=iters)
-        t_f = _time(fused_fn, xt, ids, wg, wu, wd, iters=iters)
-        t_c = _time(compact_fn, xt, ids, wg, wu, wd, iters=iters)
-
-        def _path(t, exec_gf, dispatch_mb, combine_mb):
-            return {
-                "wall_ms": round(t * 1e3, 3),
-                "exec_gflop": round(exec_gf, 4),
-                "utilization": round(achieved_gf / exec_gf, 4) if exec_gf else 1.0,
-                "dispatch_hbm_mb": round(dispatch_mb, 4),
-                "combine_hbm_mb": round(combine_mb, 4),
-            }
-
+        walls = {
+            "einsum_padded_dispatch": _time(einsum_fn, xt, ids, wg, wu, wd, iters=iters),
+            "gmm_padded_dispatch": _time(padded_fn, xt, ids, wg, wu, wd, iters=iters),
+            "gmm_ragged_padded_dispatch": _time(ragged_fn, xt, ids, wg, wu, wd, iters=iters),
+            "gmm_gather_fused_dispatch": _time(fused_fn, xt, ids, wg, wu, wd, iters=iters),
+            "gmm_compact_fused_combine": _time(compact_fn, xt, ids, wg, wu, wd, iters=iters),
+            "gmm_fused_ffn_combine": _time(fused_ffn_fn, xt, ids, wg, wu, wd, iters=iters),
+        }
         rows.append(
             {
-                "shape": name,
-                "G": g,
-                "C": c,
-                "D": d,
-                "F": f,
-                "routing": "balanced" if balanced else "skewed",
-                "tokens_routed": n_tok,
-                "tokens_padded": g * c,
-                "group_sizes": counts.tolist(),
-                "padded_gflop": round(padded_gf, 4),
-                "achieved_gflop": round(achieved_gf, 4),
+                **meta,
                 "paths": {
-                    "einsum_padded_dispatch": _path(
-                        t_e, padded_gf, padded_dispatch_mb, padded_combine_mb
-                    ),
-                    "gmm_padded_dispatch": _path(
-                        t_p, padded_gf, padded_dispatch_mb, padded_combine_mb
-                    ),
-                    "gmm_ragged_padded_dispatch": _path(
-                        t_r, ragged_exec_gf, padded_dispatch_mb, padded_combine_mb
-                    ),
-                    "gmm_gather_fused_dispatch": _path(
-                        t_f, ragged_exec_gf, fused_dispatch_mb, padded_combine_mb
-                    ),
-                    "gmm_compact_fused_combine": _path(
-                        t_c, ragged_exec_gf, fused_dispatch_mb, compact_combine_mb
-                    ),
+                    pname: {"wall_ms": round(walls[pname] * 1e3, 3), **acc}
+                    for pname, acc in path_acc.items()
                 },
             }
         )
@@ -326,37 +408,98 @@ def run_decode(iters: int = 20, smoke: bool = False) -> list[dict]:
             rtol=2e-4, atol=2e-4, err_msg=f"{name}:paged parity",
         )
 
-        row_bytes = 2 * kv * hd * np.dtype(np.float32).itemsize  # k + v
-        dense_mb = b * nb * bs * row_bytes / 1e6
-        live_pages = sum(-(-l // bs) for l in lengths)
-        paged_mb = live_pages * bs * row_bytes / 1e6
-
-        t_d = _time(dense_fn, q, k, v, valid, iters=iters)
-        t_p = _time(paged_fn, q, pool_k, pool_v, tables, ln, iters=iters)
+        meta, path_acc, ratio = decode_cell_accounting(
+            name, b, max_seq, lengths, kv, h, hd, bs
+        )
+        walls = {
+            "flash_decode_dense_masked": _time(dense_fn, q, k, v, valid, iters=iters),
+            "flash_decode_paged": _time(
+                paged_fn, q, pool_k, pool_v, tables, ln, iters=iters
+            ),
+        }
         rows.append(
             {
-                "shape": name,
-                "B": b,
-                "max_seq": max_seq,
-                "page_size": bs,
-                "lengths": list(lengths),
-                "tokens_live": int(sum(lengths)),
-                "tokens_streamed_dense": b * nb * bs,
-                "tokens_streamed_paged": live_pages * bs,
+                **meta,
                 "paths": {
-                    "flash_decode_dense_masked": {
-                        "wall_ms": round(t_d * 1e3, 3),
-                        "kv_hbm_mb": round(dense_mb, 4),
-                    },
-                    "flash_decode_paged": {
-                        "wall_ms": round(t_p * 1e3, 3),
-                        "kv_hbm_mb": round(paged_mb, 4),
-                    },
+                    pname: {"wall_ms": round(walls[pname] * 1e3, 3), **acc}
+                    for pname, acc in path_acc.items()
                 },
-                "kv_bytes_ratio_dense_over_paged": round(dense_mb / paged_mb, 3),
+                "kv_bytes_ratio_dense_over_paged": ratio,
             }
         )
     return rows
+
+
+# ---------------------------------------------------------------------------
+# baseline regression gate (--check)
+# ---------------------------------------------------------------------------
+
+def check_baseline(baseline_path: str) -> list[str]:
+    """Recompute every deterministic column from the same seeded draws and
+    diff against the committed baseline. Returns human-readable failure
+    lines (empty == green). Wall-clock, backend, and version fields are
+    deliberately ignored — only the accounting the fused kernels exist to
+    improve is gated."""
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    failures: list[str] = []
+
+    def cmp(cell: str, key: str, want, got) -> None:
+        if want != got:
+            failures.append(
+                f"{cell}.{key}: baseline {want!r} != recomputed {got!r}"
+            )
+
+    base_shapes = {r.get("shape"): r for r in base.get("shapes", [])}
+    expected = []
+    for name, g, c, d, f, balanced in SHAPES:
+        expected.append(name)
+        _, meta, path_acc = ffn_cell_accounting(name, g, c, d, f, balanced)
+        row = base_shapes.get(name)
+        if row is None:
+            failures.append(f"shapes[{name}]: missing from baseline")
+            continue
+        for key, val in meta.items():
+            cmp(f"shapes[{name}]", key, row.get(key), val)
+        for pname, acc in path_acc.items():
+            prow = (row.get("paths") or {}).get(pname)
+            if prow is None:
+                failures.append(f"shapes[{name}].paths.{pname}: missing from baseline")
+                continue
+            for key, val in acc.items():
+                cmp(f"shapes[{name}].paths.{pname}", key, prow.get(key), val)
+    for name in set(base_shapes) - set(expected):
+        failures.append(f"shapes[{name}]: in baseline but no longer benchmarked")
+
+    base_dec = {r.get("shape"): r for r in base.get("decode_shapes", [])}
+    expected = []
+    for name, b, max_seq, lengths, kv, h, hd, bs in DECODE_SHAPES:
+        expected.append(name)
+        meta, path_acc, ratio = decode_cell_accounting(
+            name, b, max_seq, lengths, kv, h, hd, bs
+        )
+        row = base_dec.get(name)
+        if row is None:
+            failures.append(f"decode_shapes[{name}]: missing from baseline")
+            continue
+        for key, val in meta.items():
+            cmp(f"decode_shapes[{name}]", key, row.get(key), val)
+        cmp(
+            f"decode_shapes[{name}]", "kv_bytes_ratio_dense_over_paged",
+            row.get("kv_bytes_ratio_dense_over_paged"), ratio,
+        )
+        for pname, acc in path_acc.items():
+            prow = (row.get("paths") or {}).get(pname)
+            if prow is None:
+                failures.append(
+                    f"decode_shapes[{name}].paths.{pname}: missing from baseline"
+                )
+                continue
+            for key, val in acc.items():
+                cmp(f"decode_shapes[{name}].paths.{pname}", key, prow.get(key), val)
+    for name in set(base_dec) - set(expected):
+        failures.append(f"decode_shapes[{name}]: in baseline but no longer benchmarked")
+    return failures
 
 
 def main() -> None:
@@ -368,7 +511,34 @@ def main() -> None:
         action="store_true",
         help="tiny FFN + decode cells, 2 iters: fast kernel regression gate",
     )
+    ap.add_argument(
+        "--check",
+        metavar="BASELINE_JSON",
+        help="recompute the deterministic columns (FLOP + HBM-byte "
+        "accounting, not wall-clock) and fail on any drift from the "
+        "committed baseline",
+    )
     args = ap.parse_args()
+
+    if args.check:
+        failures = check_baseline(args.check)
+        if failures:
+            print(
+                f"BENCH BASELINE DRIFT vs {args.check} "
+                f"({len(failures)} mismatches):",
+                file=sys.stderr,
+            )
+            for line in failures:
+                print(f"  {line}", file=sys.stderr)
+            print(
+                "If the change is intentional, regenerate the baseline: "
+                "PYTHONPATH=src python benchmarks/bench_kernels.py --out "
+                "BENCH_kernels.json",
+                file=sys.stderr,
+            )
+            raise SystemExit(1)
+        print(f"BENCH BASELINE OK ({args.check}: deterministic columns match)")
+        return
 
     iters = 2 if args.smoke else args.iters
     try:
@@ -388,21 +558,27 @@ def main() -> None:
             "wall_ms on non-TPU backends runs the Pallas paths in interpret "
             "mode (semantics, not speed); FLOP and byte accounting is "
             "backend-independent. utilization = achieved/executed FLOPs; "
-            "dispatch_hbm_mb / combine_hbm_mb = HBM bytes each leg moves; "
-            "fused-path DMA sides are counted at ceil-tile granularity "
-            "(the kernels move whole bm-row tiles), matching exec_gflop "
-            "(the fused gather path never materializes the padded input "
-            "buckets; the compact path's gmm_scatter epilogue never "
-            "materializes the padded FFN output either, and "
-            "combine_from_rows reads only live rows). All paths end in the "
-            "per-token combine, so parity covers both legs. This bench "
-            "drives the local/ESP-style dispatch; the EP all_to_all path "
-            "keeps statically-sized exchange buffers on both legs (equal "
-            "splits), where the fusion instead removes the receive-side "
-            "repack + padded FFN input/output. decode_shapes compare "
-            "dense masked flash-decode (streams B*max_seq KV rows/step) "
-            "against the paged block-table kernel (streams only live "
-            "pages): kv_hbm_mb tracks context length, not max_seq."
+            "dispatch_hbm_mb / combine_hbm_mb / hidden_hbm_mb = HBM bytes "
+            "each leg moves; fused-path DMA sides are counted at ceil-tile "
+            "granularity (the kernels move whole bm-row tiles), matching "
+            "exec_gflop (the fused gather path never materializes the "
+            "padded input buckets; the compact path's gmm_scatter epilogue "
+            "never materializes the padded FFN output either, and "
+            "combine_from_rows reads only live rows; gmm_fused_ffn_combine "
+            "runs all three matmuls in ONE kernel with the (G, C, F) "
+            "SwiGLU hidden tile resident in VMEM, so its hidden_hbm_mb is "
+            "exactly 0 where every two-kernel path pays the full padded "
+            "write + read). All paths end in the per-token combine, so "
+            "parity covers both legs. This bench drives the local/ESP-style "
+            "dispatch; the EP all_to_all path keeps statically-sized "
+            "exchange buffers on both legs (equal splits), where the "
+            "fusion instead removes the receive-side repack + padded FFN "
+            "input/output. decode_shapes compare dense masked flash-decode "
+            "(streams B*max_seq KV rows/step) against the paged "
+            "block-table kernel (streams only live pages): kv_hbm_mb "
+            "tracks context length, not max_seq. The deterministic columns "
+            "are CI-gated: bench_kernels.py --check BENCH_kernels.json "
+            "recomputes them and fails on drift."
         ),
         "shapes": rows,
         "decode_shapes": decode_rows,

@@ -4,8 +4,6 @@ Reports the steady-state peak/mean device load, migration counts and
 exposed interruption time over a mixed-scenario trace (8x8 WSC,
 DeepSeek-V3)."""
 
-import numpy as np
-
 from benchmarks.common import row, wsc_system
 from repro.core.simulator import run_serving_trace
 from repro.core.traces import mixed_scenario_trace

@@ -5,8 +5,6 @@ The paper's headline ablation ladder: baseline mapping -> +ER -> +HER ->
 NVL72 per-device MoE performance (EP=72, NVMe-hidden migration).
 """
 
-import numpy as np
-
 from benchmarks.common import nvl72_system, row, wsc_system
 from repro.core.simulator import run_serving_trace
 from repro.core.traces import mixed_scenario_trace

@@ -5,13 +5,10 @@ Local/Global steps drain over cold links — zero exposed latency.
 Run:  PYTHONPATH=src python examples/balancer_demo.py
 """
 
-import numpy as np
-
 from repro.core.comm_model import A2AWorkload, link_heatmaps
 from repro.core.er_mapping import er_mapping
 from repro.core.hardware import WSC
-from repro.core.migration import MigrationEngine, decompose
-from repro.core.ni_balancer import BalancerState, should_trigger, topology_aware_balance
+from repro.core.migration import decompose
 from repro.core.simulator import WSCSystem, run_serving_trace
 from repro.core.topology import MeshTopology
 from repro.core.traces import mixed_scenario_trace

@@ -10,7 +10,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, smoke
 from repro.core.topology import MeshTopology

@@ -1,13 +1,37 @@
 #!/usr/bin/env bash
-# One-command gate: tier-1 tests + interpret-mode kernel & bench smokes.
+# One-command gate: tier-1 tests + interpret-mode kernel & bench smokes +
+# the bench baseline regression check.
 #
-#   ./scripts/check.sh          # fast tier (-m "not slow") + smokes
+#   ./scripts/check.sh          # fast tier (-m "not slow") + smokes + baseline
 #   ./scripts/check.sh --all    # full matrix incl. slow multidevice tests
+#   ./scripts/check.sh --lint   # ruff only (what the CI lint job runs)
 #   ./scripts/check.sh -k gmm   # extra args forwarded to the tier-1 pytest
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--lint" ]]; then
+  echo "== lint: ruff check =="
+  if ! python -m ruff --version >/dev/null 2>&1; then
+    echo "check.sh --lint: ruff is not installed in this environment." >&2
+    echo "Install it with:  pip install ruff  (see requirements-dev.txt)" >&2
+    exit 1
+  fi
+  python -m ruff check .
+  echo "LINT OK"
+  exit 0
+fi
+
+# Fail early with a readable message when the runtime dependency is absent
+# (a bare 'ModuleNotFoundError: jax' traceback from deep inside pytest
+# collection is the alternative).
+if ! python -c "import jax" >/dev/null 2>&1; then
+  echo "check.sh: the 'jax' package is missing from this Python environment." >&2
+  echo "This repo needs jax + jaxlib (CPU is fine; kernels run in interpret" >&2
+  echo "mode off-TPU). Install with:  pip install jax jaxlib" >&2
+  exit 1
+fi
 
 MARK=(-m "not slow")
 TIER="fast tier (-m 'not slow'; --all for the full matrix)"
@@ -66,6 +90,20 @@ cmb = combine_from_rows(
     jnp.ones((3, 1)))
 assert np.isfinite(np.asarray(cmb)).all(), "dropped-row garbage leaked into combine"
 
+# fully-fused single-kernel FFN: all three matmuls in one Pallas call, the
+# SwiGLU hidden tile never leaves VMEM — live rows must match both the
+# two-kernel gather+scatter composition and the oracle
+from repro.kernels.gmm.ops import expert_ffn_fused
+from repro.kernels.gmm.ref import expert_ffn_fused_ref
+fused = np.asarray(
+    expert_ffn_fused(rows, wg, wu, wd, offs, gs, capacity=16))
+fref = np.asarray(expert_ffn_fused_ref(rows, wg, wu, wd, offs, gs, 16))
+for off, cnt in zip(np.asarray(offs), np.asarray(gs)):
+    np.testing.assert_allclose(
+        fused[off:off+cnt], compact[off:off+cnt], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        fused[off:off+cnt], fref[off:off+cnt], rtol=1e-5, atol=1e-5)
+
 q = jax.random.normal(ks[0], (1, 32, 4, 16))
 k = jax.random.normal(ks[1], (1, 32, 2, 16))
 v = jax.random.normal(ks[2], (1, 32, 2, 16))
@@ -109,5 +147,9 @@ EOF
 echo "== kernel-dispatch bench smoke (interpret mode) =="
 python benchmarks/bench_kernels.py --smoke > /dev/null
 echo "bench smoke OK"
+
+echo "== bench baseline regression check (deterministic columns) =="
+python benchmarks/bench_kernels.py --check BENCH_kernels.json
+echo "bench baseline OK"
 
 echo "ALL CHECKS PASSED"

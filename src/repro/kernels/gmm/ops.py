@@ -16,6 +16,7 @@ from repro.kernels.gmm.gmm import gmm, gmm_dual_act
 from repro.kernels.gmm.ragged import (
     gmm_dual_act_gather,
     gmm_dual_act_ragged,
+    gmm_fused_ffn,
     gmm_gather,
     gmm_ragged,
     gmm_scatter,
@@ -188,5 +189,32 @@ def expert_ffn_gather_compact(
     return gmm_scatter(
         h, wd, offsets, group_sizes,
         out_rows=x.shape[0], groups_per_weight=groups_per_weight,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "groups_per_weight", "interpret")
+)
+def expert_ffn_fused(
+    x,
+    wg,
+    wu,
+    wd,
+    offsets,
+    group_sizes,
+    capacity: int,
+    groups_per_weight: int = 1,
+    interpret: bool | None = None,
+):
+    """Fully-fused single-kernel expert FFN (``gmm_fused_ffn``): gather
+    prologue, VMEM-resident SwiGLU hidden tiles, down-projection, scatter
+    epilogue — same flat-in/flat-out contract as ``expert_ffn_gather_compact``
+    but the bucket-padded ``(G, capacity, F)`` hidden tensor between the two
+    halves never round-trips HBM."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return gmm_fused_ffn(
+        x, wg, wu, wd, offsets, group_sizes,
+        capacity=capacity, groups_per_weight=groups_per_weight,
         interpret=interpret,
     )

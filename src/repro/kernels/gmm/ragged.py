@@ -38,6 +38,26 @@ materialized in HBM — that's the one dispatch round-trip per MoE layer the
 fused path removes. Dead tiles skip the DMA *and* the MXU, so the ragged
 FLOP/byte accounting is unchanged.
 
+``gmm_fused_ffn`` chains all three of the above into **one** kernel: the
+gather prologue reads flat ``(R, d)`` token rows, the dual-activation
+SwiGLU front half produces per-tile hidden activations
+``silu(x @ wg) * (x @ wu)`` — shape ``(bm, F)``, computed ``(bm, bf)``
+block by block and consumed *immediately* by the down-projection into a
+``(bm, d)`` VMEM output accumulator — and the scatter epilogue stores the
+finished row-tile back at the same per-bucket offsets. The bucket-padded
+``(G, capacity, F)`` hidden tensor between the front half and the down
+projection, the last padded intermediate on the expert hot path, **never
+exists in HBM**: the only HBM tensors the kernel touches are the flat
+input rows, the three weight stacks, and the flat compact output. The
+grid is ``(G, capacity/bm, F/bf, d/bk)``; for each row-tile the ``jf``
+loop walks hidden blocks (each fully reduced over ``k`` before the next
+starts) and ``out_acc += h_jf @ wd[jf]`` retires each hidden block the
+step it is produced, so peak VMEM holds one ``(bm, bf)`` hidden block
+plus the ``(bm, d)`` accumulator — independent of ``F``. The gather DMA
+double-buffering, the store serialization, and the partial-tile
+spill-overwrite contract (``capacity % bm == 0`` keeps padded spans
+inside their rank segment) are inherited unchanged from the pieces below.
+
 ``gmm_scatter`` is the *combine*-leg mirror of the gather prologue: a
 ragged grouped matmul (the expert down-projection) whose **epilogue writes
 result tiles back at the same per-bucket offsets** — a dynamic-offset
@@ -592,4 +612,190 @@ def gmm_scatter(
         out_shape=jax.ShapeDtypeStruct((out_pad, f), x.dtype),
         interpret=interpret,
     )(offsets.astype(jnp.int32), group_sizes.astype(jnp.int32), x, w)
+    return out[:out_rows]
+
+
+# ---------------------------------------------------------------------------
+# fully-fused SwiGLU expert FFN (gather prologue + VMEM hidden + scatter)
+# ---------------------------------------------------------------------------
+
+def _fused_ffn_kernel(
+    off_ref, gs_ref, x_any, wg_ref, wu_ref, wd_ref, o_any,
+    accg_ref, accu_ref, out_ref, xbuf, gsem, obuf, pend, osem,
+    *, g: int, nmi: int, nj: int, nk: int, nsteps: int,
+    bm: int, bk: int, dn: int, r_max_in: int, r_max_out: int,
+):
+    gi = pl.program_id(0)
+    mi = pl.program_id(1)
+    jf = pl.program_id(2)
+    k = pl.program_id(3)
+    count = gs_ref[gi]
+    live, t, (gi1, mi1, k1, next_live) = _gather_pipeline(
+        gs_ref, g=g, nmi=nmi, nj=nj, nk=nk, bm=bm
+    )
+    gather = functools.partial(
+        _gather_dma, x_any, xbuf, gsem, off_ref, bm=bm, bk=bk, r_max=r_max_in
+    )
+    store = functools.partial(
+        _scatter_store, o_any, obuf, osem, off_ref, bm=bm, bn=dn, r_max=r_max_out
+    )
+
+    @pl.when(t == 0)
+    def _():
+        pend[0] = 0  # no store in flight yet
+
+    # A fresh row-tile: reset the (bm, dn) output accumulator. It survives
+    # the whole (jf, k) loop nest — one full hidden row per token row is
+    # reduced into it without ever leaving VMEM.
+    @pl.when((jf == 0) & (k == 0))
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(k == 0)
+    def _():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    # Gather prologue: identical double-buffered pipeline to the
+    # stand-alone gather kernels (warm-up fetch + next-step prefetch).
+    @pl.when((t == 0) & live)
+    def _():
+        gather(gi, mi, k, 0).start()
+
+    @pl.when(next_live)
+    def _():
+        gather(gi1, mi1, k1, (t + 1) % 2).start()
+
+    @pl.when(live)
+    def _():
+        gather(gi, mi, k, t % 2).wait()
+        dims = (((1,), (0,)), ((), ()))
+        accg_ref[...] += jax.lax.dot_general(
+            xbuf[t % 2], wg_ref[0], dims, preferred_element_type=jnp.float32
+        )
+        accu_ref[...] += jax.lax.dot_general(
+            xbuf[t % 2], wu_ref[0], dims, preferred_element_type=jnp.float32
+        )
+
+    # Hidden block jf is fully reduced: apply the dual activation and
+    # retire it straight into the down-projection accumulator. The cast to
+    # the I/O dtype reproduces the unfused pair bit-for-bit (there the
+    # hidden tensor round-trips HBM at the I/O dtype); masked tail rows
+    # stay exactly zero so the final store's spill contract holds.
+    @pl.when((k == nk - 1) & live)
+    def _():
+        rows = mi * bm + jax.lax.broadcasted_iota(jnp.int32, accg_ref.shape, 0)
+        h = jnp.where(
+            rows < count, jax.nn.silu(accg_ref[...]) * accu_ref[...], 0.0
+        ).astype(obuf.dtype)
+        out_ref[...] += jax.lax.dot_general(
+            h,
+            wd_ref[0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    # Scatter epilogue (last hidden block of a live row-tile): stage the
+    # finished (bm, dn) tile and DMA it to the flat output at the bucket's
+    # offset — same serialized-store bookkeeping as ``gmm_scatter`` (wait
+    # the previous store before reusing the staging tile; completion order
+    # == grid order, which is what makes partial-tile spills safe).
+    @pl.when((jf == nj - 1) & (k == nk - 1) & live)
+    def _():
+        @pl.when(pend[0] == 1)
+        def _():
+            store(pend[1], pend[2], pend[3]).wait()
+
+        rows = mi * bm + jax.lax.broadcasted_iota(jnp.int32, out_ref.shape, 0)
+        obuf[...] = jnp.where(rows < count, out_ref[...], 0.0).astype(obuf.dtype)
+        store(gi, mi, 0).start()
+        pend[0] = 1
+        pend[1] = gi
+        pend[2] = mi
+        pend[3] = 0
+
+    # Drain: the final grid step waits out the last in-flight store.
+    @pl.when((t == nsteps - 1) & (pend[0] == 1))
+    def _():
+        store(pend[1], pend[2], pend[3]).wait()
+        pend[0] = 0
+
+
+def gmm_fused_ffn(
+    x: jax.Array,            # (R, D) flat token rows, bucket-contiguous
+    wg: jax.Array,           # (G // gpw, D, F)
+    wu: jax.Array,           # (G // gpw, D, F)
+    wd: jax.Array,           # (G // gpw, F, D_out)
+    offsets: jax.Array,      # (G,) int32 — bucket g's first row (in and out)
+    group_sizes: jax.Array,  # (G,) int32 — bucket g's live row count
+    *,
+    capacity: int,
+    out_rows: int | None = None,
+    groups_per_weight: int = 1,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fully-fused SwiGLU expert FFN over flat compacted rows.
+
+    ``out[offsets[g] : offsets[g]+count_g] =
+    (silu(rows_g @ wg) * (rows_g @ wu)) @ wd`` with ``rows_g =
+    x[offsets[g] : offsets[g]+count_g]``. One kernel: the gather prologue
+    reads each live ``(bm, bk)`` input tile by dynamic-offset DMA, the
+    dual-activation front half reduces hidden blocks in VMEM, the
+    down-projection retires each block into a ``(bm, D_out)`` accumulator,
+    and the scatter epilogue stores the tile back at the same offsets.
+    The padded ``(G, capacity, F)`` hidden tensor never touches HBM —
+    hidden-leg HBM bytes are exactly zero. Output rows outside every live
+    segment follow the ``gmm_scatter`` contract (zero where a partial tile
+    spilled, unwritten garbage otherwise); callers combine through the
+    dispatch metadata. Dead tiles skip the DMA, both MXU passes, and the
+    store.
+    """
+    r, d = x.shape
+    f = wg.shape[-1]
+    dn = wd.shape[-1]
+    gpw = groups_per_weight
+    g = wg.shape[0] * gpw
+    assert offsets.shape == (g,), (offsets.shape, g)
+    assert wd.shape[-2] == f, (wd.shape, f)
+    out_rows = r if out_rows is None else out_rows
+    bm, bf, bk = _tile(capacity, bm), _tile(f, bn), _tile(d, bk)
+    x, r_pad = _pad_rows(x, bm)
+    nk = d // bk
+    nmi, nj = capacity // bm, f // bf
+    out_pad = out_rows + bm  # a partial tile's spill never runs off the end
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(g, nmi, nj, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, bk, bf), lambda gi, i, j, k, off, gs: (gi // gpw, k, j)),
+            pl.BlockSpec((1, bk, bf), lambda gi, i, j, k, off, gs: (gi // gpw, k, j)),
+            pl.BlockSpec((1, bf, dn), lambda gi, i, j, k, off, gs: (gi // gpw, j, 0)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bf), jnp.float32),   # gate accumulator
+            pltpu.VMEM((bm, bf), jnp.float32),   # up accumulator
+            pltpu.VMEM((bm, dn), jnp.float32),   # down-proj accumulator
+            pltpu.VMEM((2, bm, bk), x.dtype),    # gather double-buffer
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((bm, dn), x.dtype),       # store staging tile
+            pltpu.SMEM((4,), jnp.int32),         # pending-store bookkeeping
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_ffn_kernel,
+            g=g, nmi=nmi, nj=nj, nk=nk, nsteps=g * nmi * nj * nk,
+            bm=bm, bk=bk, dn=dn,
+            r_max_in=r_pad - bm, r_max_out=out_pad - bm,
+        ),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((out_pad, dn), x.dtype),
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), group_sizes.astype(jnp.int32), x, wg, wu, wd)
     return out[:out_rows]

@@ -132,3 +132,24 @@ def expert_ffn_compact_ref(
         x, wg, wu, wd, offsets, group_sizes, capacity, groups_per_weight
     )
     return scatter_rows_ref(y, offsets, group_sizes, x.shape[0])
+
+
+def expert_ffn_fused_ref(
+    x: jax.Array,
+    wg: jax.Array,
+    wu: jax.Array,
+    wd: jax.Array,
+    offsets: jax.Array,
+    group_sizes: jax.Array,
+    capacity: int,
+    groups_per_weight: int = 1,
+):
+    """Oracle for ``gmm_fused_ffn``. The fusion is a pure execution-strategy
+    change (the hidden tensor lives in VMEM instead of HBM; the math per row
+    is identical), so the oracle IS the compact-output oracle: gather into
+    padded buckets, SwiGLU FFN, scatter back to flat rows at the same
+    offsets. Kept as its own name so call sites and tests say which kernel
+    they are checking."""
+    return expert_ffn_compact_ref(
+        x, wg, wu, wd, offsets, group_sizes, capacity, groups_per_weight
+    )

@@ -40,6 +40,9 @@ from repro.kernels.flash_decode.ops import (
     flash_decode_partials_op,
 )
 from repro.kernels.gmm.ops import (
+    expert_ffn_fused as _expert_ffn_fused_op,
+)
+from repro.kernels.gmm.ops import (
     expert_ffn_gather as _expert_ffn_gather_op,
 )
 from repro.kernels.gmm.ops import (
@@ -50,6 +53,7 @@ from repro.kernels.gmm.ops import (
 )
 from repro.kernels.gmm.ref import (
     expert_ffn_compact_ref,
+    expert_ffn_fused_ref,
     expert_ffn_gather_ref,
     expert_ffn_ragged_ref,
 )
@@ -228,6 +232,62 @@ def _ffn_compact_bwd(cap, gpw, interpret, res, ct):
 _ffn_compact_kernel.defvjp(_ffn_compact_fwd, _ffn_compact_bwd)
 
 
+# VMEM bound for the fully-fused kernel: it holds a (bm, d) fp32 output
+# accumulator + a (bm, d) staging tile + a double-buffered (bf, d) w_down
+# panel per step. At bm = bf = 128 and d = 4096 that is ~8.5 MB — near the
+# ~16 MB budget — so larger model dims fall back to the two-kernel pair
+# (which blocks the down-projection's output columns).
+FUSED_FFN_MAX_DOWN_DIM = 4096
+
+
+def can_gmm_fused(
+    capacity: int, d: int, f: int, interpret: bool, d_out: int | None = None
+) -> bool:
+    """Can the fully-fused single-kernel FFN (``gmm_fused_ffn``) take flat
+    rows with (d, f, d_out) expert dims? Same MXU-tiling gates as the
+    gather/scatter pair plus the VMEM bound on the output accumulator /
+    staging tile / w_down panel — all of which scale with the
+    *down-projection output* dim, so the bound is on ``d_out`` (== ``d``
+    for the square expert-FFN contract, the default). The bound applies in
+    interpret mode too, so CPU tests exercise the same dispatch decisions
+    the compiled path makes."""
+    d_out = d if d_out is None else d_out
+    return (
+        can_gmm(capacity, d, f, interpret)
+        and can_gmm(capacity, f, d_out, interpret)
+        and d_out <= FUSED_FFN_MAX_DOWN_DIM
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _ffn_fused_kernel(cap, gpw, interpret, x, wg, wu, wd, offsets, group_sizes):
+    return _expert_ffn_fused_op(
+        x, wg, wu, wd, offsets, group_sizes,
+        capacity=cap, groups_per_weight=gpw, interpret=interpret,
+    )
+
+
+def _ffn_fused_fwd(cap, gpw, interpret, x, wg, wu, wd, offsets, group_sizes):
+    y = _ffn_fused_kernel(cap, gpw, interpret, x, wg, wu, wd, offsets, group_sizes)
+    return y, (x, wg, wu, wd, offsets, group_sizes)
+
+
+def _ffn_fused_bwd(cap, gpw, interpret, res, ct):
+    # Reference-math backward — identical to the compact pair's backward
+    # (the fusion changes where the hidden tensor lives, not the math), so
+    # the cotangent flows back onto the flat rows through the same
+    # gather/FFN/scatter jnp composition.
+    x, wg, wu, wd, offs, gs = res
+    _, vjp = jax.vjp(
+        lambda a, b, c, d: expert_ffn_fused_ref(a, b, c, d, offs, gs, cap, gpw),
+        x, wg, wu, wd,
+    )
+    return (*vjp(ct), _zero_ct(offs), _zero_ct(gs))
+
+
+_ffn_fused_kernel.defvjp(_ffn_fused_fwd, _ffn_fused_bwd)
+
+
 def expert_ffn_from_rows(
     x: jax.Array,            # (R, D) flat token rows, bucket-contiguous
     wg: jax.Array,           # (G/gpw, D, F)
@@ -240,6 +300,7 @@ def expert_ffn_from_rows(
     groups_per_weight: int = 1,
     enabled: bool = True,
     compact_out: bool = False,
+    fused: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused dispatch-scatter grouped SwiGLU FFN.
@@ -258,11 +319,33 @@ def expert_ffn_from_rows(
     unspecified in the kernel output (zeroed by the reference path) and
     must never be read. Falls back to the reference gather + einsum math
     when disabled or when shapes don't tile.
+
+    With ``fused=True`` (requires ``compact_out=True`` — the fusion's whole
+    point is the compact layout on both sides) the three matmuls run as ONE
+    kernel (``gmm_fused_ffn``): the SwiGLU hidden activations live entirely
+    in VMEM accumulators, so the bucket-padded ``(G, capacity, F)`` hidden
+    tensor — the last padded intermediate of the expert hot path — never
+    touches HBM. Shape-gated by ``can_gmm_fused`` (the gather/scatter gates
+    plus a VMEM bound on the model dim); ineligible shapes fall back to the
+    two-kernel gather+scatter pair, then to the reference math.
     """
     d = x.shape[-1]
     f = wg.shape[-1]
     interpret = default_interpret() if interpret is None else interpret
+    if fused and not compact_out:
+        raise ValueError(
+            "expert_ffn_from_rows: fused=True requires compact_out=True — "
+            "the single-kernel path always emits the flat compact layout"
+        )
     if compact_out:
+        if enabled and fused and can_gmm_fused(
+            capacity, d, f, interpret, wd.shape[-1]
+        ):
+            return _ffn_fused_kernel(
+                capacity, groups_per_weight, interpret,
+                x, wg, wu, wd,
+                offsets.astype(jnp.int32), group_sizes.astype(jnp.int32),
+            )
         if enabled and can_gmm_gather(capacity, d, f, interpret):
             return _ffn_compact_kernel(
                 capacity, groups_per_weight, interpret,

@@ -31,7 +31,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCHS, SHAPES, get_config, shapes_for
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -48,7 +47,7 @@ from repro.launch.mesh import make_er_mesh, make_production_mesh
 from repro.runtime.optimizer import AdamWConfig, adamw_init
 from repro.runtime.train import make_train_step
 
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

@@ -12,13 +12,11 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke as smoke_cfg
 from repro.kernels.registry import parse_use_kernels
 from repro.launch.mesh import make_mesh_compat
-from repro.core.er_mapping import er_mapping
 from repro.core.topology import MeshTopology
 from repro.models import transformer as T
 from repro.parallel.ctx import ParallelCtx

@@ -19,10 +19,8 @@ Example (CPU):
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, smoke as smoke_cfg
 from repro.kernels.registry import parse_use_kernels

@@ -130,7 +130,10 @@ def moe_esp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
         # the down-projection back at the same offsets — neither the
         # (E, cap, d) dispatch buffer nor the padded FFN output is ever
         # materialized; the combine gathers each kept copy's row through
-        # the same metadata.
+        # the same metadata. fused=True additionally collapses the three
+        # matmuls into one kernel when can_gmm_fused accepts the shapes,
+        # keeping the (E, cap, F) hidden tensor in VMEM (registry falls
+        # back to the gather+scatter pair otherwise).
         ids2 = ids.reshape(b * s, k)
         row_ids, offsets, counts, slots, keep = dispatch_metadata(ids2, e, cap)
         rows = x.reshape(b * s, d)[row_ids]
@@ -144,6 +147,7 @@ def moe_esp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
             capacity=cap,
             enabled=True,
             compact_out=True,
+            fused=True,
         )
         out = combine_from_rows(
             y, offsets[ids2] + slots, keep, w.reshape(b * s, k)

@@ -18,7 +18,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import normal_init
-from repro.parallel.ctx import ParallelCtx
 
 CONV_W = 4  # causal conv width (Mamba2)
 
@@ -219,7 +218,6 @@ def slstm_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
 
 
 def slstm_state_init(cfg: ModelConfig, batch: int) -> dict:
-    d = cfg.d_model
     h, hd = xlstm_dims(cfg)
     return {
         "c": jnp.zeros((batch, h, hd), jnp.float32),

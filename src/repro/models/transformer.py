@@ -22,8 +22,6 @@ one token per call. SSM caches are O(1) in context length.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -444,7 +442,6 @@ def decode_step(
 def _zamba_decode(params, x, cache, cfg, ctx, pos):
     shared = params["shared"]
     new_cache = dict(cache)
-    posb = pos[None] if pos.ndim else pos
 
     def unit(carry, inp):
         h = carry

@@ -14,7 +14,6 @@ steps without recompilation.
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
@@ -386,6 +385,10 @@ def ep_moe_shardmap(
             # source rank r', still bucket-compacted in *my* bucket order.
             # No padded FFN output, no (spd, ep, cap, d) repack, and the
             # receive side reads only live rows through dest/posr.
+            # fused=True: when can_gmm_fused accepts the shapes all three
+            # matmuls run as ONE kernel and the (G, cap, F) hidden tensor
+            # stays in VMEM — the registry falls back to the gather+scatter
+            # pair (same layout contract) when it doesn't.
             y = registry.expert_ffn_from_rows(
                 recv.reshape(ep * spd * cap, d),
                 wg,
@@ -397,6 +400,7 @@ def ep_moe_shardmap(
                 groups_per_weight=ep,
                 enabled=True,
                 compact_out=True,
+                fused=True,
             )
             back = jax.lax.all_to_all(
                 y.reshape(ep, spd * cap, d), axis,

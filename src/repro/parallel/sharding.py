@@ -19,11 +19,9 @@ param layout), ``cache_specs`` mirrors ``transformer.init_cache``.
 from __future__ import annotations
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models import transformer as T
 from repro.parallel.ctx import ParallelCtx
 
 

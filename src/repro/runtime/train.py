@@ -12,8 +12,6 @@ closure with:
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -9,6 +9,11 @@ Covers:
   contract, ``compact_out`` FFN parity + gradients, and the metadata-driven
   ``combine_from_rows`` vs ``bucket_combine`` (NaN-poisoned gap rows must
   never leak — balanced and heavily skewed routing, with capacity drops);
+* ``gmm_fused_ffn`` (fully-fused single-kernel FFN): bit-closeness to the
+  gather+scatter two-kernel composition and the einsum oracle on live rows
+  (balanced, skewed with capacity drops, decode shapes, NaN-poisoned
+  dropped rows), gradient parity through the custom_vjp, the
+  fused-requires-compact contract, and the VMEM-bound fallback;
 * ``validate_ep_token_split``: the prefill floor-truncation guard
   (non-divisible ``b*s`` used to under-size ``bucket_capacity`` or die
   inside shard_map with an opaque spec error);
@@ -38,6 +43,7 @@ import pytest
 from repro.configs import get_config, smoke
 from repro.kernels import registry
 from repro.kernels.gmm.ops import (
+    expert_ffn_fused,
     expert_ffn_gather,
     expert_ffn_gather_compact,
     expert_ffn_ragged,
@@ -47,6 +53,7 @@ from repro.kernels.gmm.ops import (
 from repro.kernels.gmm.ragged import gmm_dual_act_gather
 from repro.kernels.gmm.ref import (
     expert_ffn_compact_ref,
+    expert_ffn_fused_ref,
     expert_ffn_gather_ref,
     gather_buckets_ref,
     gmm_ragged_ref,
@@ -195,7 +202,6 @@ def test_expert_ffn_gather_matches_padded_ragged_and_einsum():
     """The fused path must agree with BOTH the padded ragged kernel over the
     materialized buckets AND the pure einsum reference."""
     gw, gpw, cap, d, f = 2, 2, 16, 8, 12
-    g = gw * gpw
     counts = [7, 0, 16, 2]
     r, offsets = _segments(counts)
     ks = jax.random.split(RNG, 4)
@@ -323,7 +329,6 @@ def test_expert_ffn_compact_matches_padded_live_rows():
     """compact_out must be a pure layout change: live rows equal the padded
     gather path's bucket rows (and the pure-jnp compact oracle)."""
     gw, gpw, cap, d, f = 2, 2, 16, 8, 12
-    g = gw * gpw
     counts = [7, 0, 16, 2]
     r, offsets = _segments(counts)
     ks = jax.random.split(RNG, 4)
@@ -382,6 +387,199 @@ def test_expert_ffn_compact_grad_matches_ref():
     gr = jax.grad(loss, argnums=(1, 2, 3, 4))(ref, x, wg, wu, wd)
     for a, b in zip(gk, gr):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fully-fused single-kernel FFN (gmm_fused_ffn: VMEM-resident hidden tile)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "g,cap,d,f,counts",
+    [
+        (4, 16, 8, 12, [16, 16, 16, 16]),       # balanced: every bucket full
+        (4, 16, 8, 12, [3, 0, 16, 5]),          # skewed: zero + full groups
+        (3, 96, 64, 160, [1, 95, 40]),          # non-128 C/D/F, partial tiles
+        (2, 128, 128, 256, [128, 17]),          # MXU-native tiles
+        (6, 8, 8, 12, [8, 8, 3, 0, 1, 2]),      # decode-ish: tiny capacity
+    ],
+    ids=["balanced", "skewed", "partial_tiles", "mxu_native", "decode"],
+)
+def test_gmm_fused_ffn_matches_pair_and_oracle(g, cap, d, f, counts):
+    """The single-kernel fused FFN must be bit-close to the gather+scatter
+    two-kernel composition AND the pure-jnp oracle on every live row — the
+    VMEM-resident hidden tile is an execution-strategy change only."""
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 4)
+    x = jax.random.normal(ks[0], (max(r, 1), d))
+    wg = jax.random.normal(ks[1], (g, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (g, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (g, f, d)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    fused = np.asarray(
+        expert_ffn_fused(x, wg, wu, wd, offsets, gs, capacity=cap)
+    )
+    pair = np.asarray(
+        expert_ffn_gather_compact(x, wg, wu, wd, offsets, gs, capacity=cap)
+    )
+    oracle = np.asarray(expert_ffn_fused_ref(x, wg, wu, wd, offsets, gs, cap))
+    for gi, cnt in enumerate(counts):
+        off = int(np.asarray(offsets)[gi])
+        np.testing.assert_allclose(
+            fused[off : off + cnt], pair[off : off + cnt], rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            fused[off : off + cnt], oracle[off : off + cnt], rtol=1e-5, atol=1e-5
+        )
+
+
+@pytest.mark.parametrize("gpw", [2, 3])
+def test_gmm_fused_ffn_groups_per_weight(gpw):
+    """EP layout: gpw consecutive buckets (per-source-rank raggedness) share
+    one weight row through all three fused matmuls."""
+    gw, cap, d, f = 2, 16, 24, 20
+    g = gw * gpw
+    counts = [(3 * i) % (cap + 1) for i in range(g)]
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 4)
+    x = jax.random.normal(ks[0], (r, d))
+    wg = jax.random.normal(ks[1], (gw, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (gw, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (gw, f, d)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    fused = np.asarray(
+        expert_ffn_fused(
+            x, wg, wu, wd, offsets, gs, capacity=cap, groups_per_weight=gpw
+        )
+    )
+    oracle = np.asarray(
+        expert_ffn_fused_ref(x, wg, wu, wd, offsets, gs, cap, gpw)
+    )
+    live = _live_rows(counts, offsets, r)
+    np.testing.assert_allclose(fused[live], oracle[live], rtol=1e-5, atol=1e-5)
+
+
+def test_gmm_fused_ffn_nan_poisoned_gap_rows():
+    """Junk rows between segments (dropped copies' would-be rows) may hold
+    NaN; the fused kernel's gather prologue only addresses live segments, a
+    partial tile's over-read of a NaN row must stay confined to masked tail
+    rows, and every live output row stays finite and exact."""
+    g, cap, d, f = 3, 16, 8, 12
+    counts = [5, 0, 9]
+    r, offsets = _segments(counts, pad_between=3)
+    ks = jax.random.split(RNG, 4)
+    x = jax.random.normal(ks[0], (r, d))
+    live = _live_rows(counts, offsets, r)
+    x = jnp.where(jnp.asarray(live)[:, None], x, jnp.nan)
+    wg = jax.random.normal(ks[1], (g, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (g, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (g, f, d)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    out = np.asarray(expert_ffn_fused(x, wg, wu, wd, offsets, gs, capacity=cap))
+    ref = np.asarray(
+        expert_ffn_fused_ref(
+            jnp.nan_to_num(x), wg, wu, wd, offsets, gs, cap
+        )
+    )
+    assert np.isfinite(out[live]).all(), "NaN gap rows leaked into live rows"
+    np.testing.assert_allclose(out[live], ref[live], rtol=1e-5, atol=1e-5)
+
+
+def test_expert_ffn_from_rows_fused_grad_matches_ref():
+    """Kernel forward + reference backward (custom_vjp) through the fully-
+    fused kernel — gradients flow back onto the flat rows and all three
+    weight stacks exactly as through the compact oracle."""
+    g, cap, d, f = 3, 16, 8, 12
+    counts = [4, 16, 0]
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 4)
+    x = jax.random.normal(ks[0], (r, d))
+    wg = jax.random.normal(ks[1], (g, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (g, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (g, f, d)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    live = jnp.asarray(_live_rows(counts, offsets, r))[:, None]
+
+    def loss(fn, x, wg, wu, wd):
+        # Square only live rows: gap rows are unspecified kernel output.
+        return ((fn(x, wg, wu, wd) * live) ** 2).sum()
+
+    kern = lambda *a: registry.expert_ffn_from_rows(
+        *a, offsets, gs, capacity=cap, enabled=True, compact_out=True, fused=True
+    )
+    ref = lambda *a: expert_ffn_fused_ref(*a, offsets, gs, cap)
+    gk = jax.grad(loss, argnums=(1, 2, 3, 4))(kern, x, wg, wu, wd)
+    gr = jax.grad(loss, argnums=(1, 2, 3, 4))(ref, x, wg, wu, wd)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_fused_requires_compact_out():
+    """fused=True without compact_out is a contract error (the single
+    kernel always emits the flat layout), not a silent fallback."""
+    x = jnp.zeros((8, 8))
+    w = jnp.zeros((2, 8, 8))
+    offs = jnp.zeros((2,), jnp.int32)
+    gs = jnp.zeros((2,), jnp.int32)
+    with pytest.raises(ValueError, match="compact_out"):
+        registry.expert_ffn_from_rows(
+            x, w, w, jnp.zeros((2, 8, 8)), offs, gs, capacity=8, fused=True
+        )
+
+
+def test_fused_vmem_gate_falls_back_to_pair(monkeypatch):
+    """Shapes past the fused kernel's VMEM bound (large model dim) must
+    fall back to the gather+scatter pair — same results, no error. The
+    bound is shrunk so the test doesn't need a genuinely huge tensor."""
+    assert not registry.can_gmm_fused(16, 8192, 128, True)
+    g, cap, d, f = 3, 16, 8, 12
+    counts = [4, 16, 0]
+    r, offsets = _segments(counts)
+    ks = jax.random.split(RNG, 4)
+    x = jax.random.normal(ks[0], (r, d))
+    wg = jax.random.normal(ks[1], (g, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (g, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (g, f, d)) * 0.1
+    gs = jnp.asarray(counts, jnp.int32)
+    want = registry.expert_ffn_from_rows(
+        x, wg, wu, wd, offsets, gs, capacity=cap, compact_out=True, fused=True
+    )
+    monkeypatch.setattr(registry, "FUSED_FFN_MAX_DOWN_DIM", d - 1)
+    assert not registry.can_gmm_fused(cap, d, f, True)
+    got = registry.expert_ffn_from_rows(
+        x, wg, wu, wd, offsets, gs, capacity=cap, compact_out=True, fused=True
+    )
+    live = _live_rows(counts, offsets, r)
+    np.testing.assert_allclose(
+        np.asarray(got)[live], np.asarray(want)[live], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_fused_skewed_pipeline_parity_with_drops():
+    """Full dispatch->fused-FFN->combine pipeline at heavily skewed routing
+    with capacity overflow, single kernel vs the padded reference pipeline
+    — the same cell as test_compact_combine_skewed_parity but through
+    gmm_fused_ffn."""
+    e, cap, d, f = 6, 8, 8, 12
+    n, k = 40, 2
+    ks = jax.random.split(RNG, 6)
+    hot = jax.random.bernoulli(ks[0], 0.7, (n, k))
+    ids = jnp.where(hot, 0, jax.random.randint(ks[1], (n, k), 0, 3))
+    x = jax.random.normal(ks[2], (n, d))
+    w = jax.random.uniform(ks[3], (n, k))
+    wg = jax.random.normal(ks[4], (e, d, f)) * 0.1
+    wu = jax.random.normal(ks[5], (e, d, f)) * 0.1
+    wd = jax.random.normal(ks[0], (e, f, d)) * 0.1
+    row_ids, offsets, counts, slots, keep = dispatch_metadata(ids, e, cap)
+    assert int(counts[0]) == cap and not bool(keep.all())  # overflow happened
+    bufs, slots_b, keep_b = bucket_dispatch(x, ids, e, cap)
+    y_pad = expert_ffn_ragged(bufs, wg, wu, wd, counts)
+    ref = bucket_combine(y_pad, ids, slots_b, keep_b, w)
+    y_flat = registry.expert_ffn_from_rows(
+        x[row_ids], wg, wu, wd, offsets, counts,
+        capacity=cap, enabled=True, compact_out=True, fused=True,
+    )
+    out = combine_from_rows(y_flat, offsets[ids] + slots, keep, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,7 @@ from repro.models.attention import (
 from repro.models.layers import apply_rope
 from repro.models.moe import moe_dense, moe_esp, moe_init, route
 from repro.parallel.collectives import bucket_combine, bucket_dispatch
-from repro.parallel.ctx import NO_MESH, ParallelCtx
+from repro.parallel.ctx import ParallelCtx
 
 
 @pytest.fixture(scope="module")

@@ -102,6 +102,57 @@ def test_ep_fused_dispatch_parity_8dev():
     assert "FUSED_OK" in out
 
 
+def test_ep_fused_ffn_single_kernel_8dev():
+    """The fully-fused single-kernel FFN (gmm_fused_ffn) must actually
+    engage inside ep_moe_shardmap's shard_map body over a real 4-way
+    all_to_all — and match both the two-kernel gather+scatter pair (VMEM
+    gate forced shut) and the dense oracle, prefill and decode."""
+    out = _run(
+        """
+        import jax, jax.numpy as jnp, dataclasses
+        from repro.configs import get_config, smoke
+        from repro.kernels import registry
+        from repro.models.moe import moe_dense, moe_ep, moe_init
+        from repro.parallel.ctx import ParallelCtx
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
+        ctx = ParallelCtx(mesh=mesh, capacity_factor=8.0, use_kernels=True)
+        ref_ctx = ParallelCtx(capacity_factor=8.0, use_kernels=False)
+        cfg = dataclasses.replace(smoke(get_config("dbrx-132b")),
+                                  n_experts=4, experts_per_token=2)
+        rng = jax.random.PRNGKey(0)
+        p = moe_init(rng, cfg)
+        # Record whether the fused gate was consulted AND said yes.
+        orig = registry.can_gmm_fused
+        verdicts = []
+        def spy(*a, **kw):
+            v = orig(*a, **kw)
+            verdicts.append(v)
+            return v
+        registry.can_gmm_fused = spy
+        for shape in ((4, 8), (8, 1)):
+            x = jax.random.normal(rng, (*shape, cfg.d_model)) * 0.5
+            ref, _ = moe_dense(p, x, cfg, ref_ctx)
+            verdicts.clear()
+            with mesh:
+                fused, _ = jax.jit(lambda p, x: moe_ep(p, x, cfg, ctx))(p, x)
+            assert verdicts and all(verdicts), ("fused gate never engaged", shape)
+            err = float(jnp.max(jnp.abs(fused - ref)))
+            assert err < 1e-5, ("fused vs dense", shape, err)
+            # Force the VMEM gate shut: the registry must fall back to the
+            # two-kernel pair with identical results over the same exchange.
+            registry.can_gmm_fused = lambda *a, **kw: False
+            with mesh:
+                pair, _ = jax.jit(lambda p, x: moe_ep(p, x, cfg, ctx))(p, x)
+            registry.can_gmm_fused = spy
+            err = float(jnp.max(jnp.abs(fused - pair)))
+            assert err < 1e-6, ("fused vs pair", shape, err)
+        print("FUSED_FFN_OK")
+        """
+    )
+    assert "FUSED_FFN_OK" in out
+
+
 def test_ep_compact_combine_skewed_and_validation_8dev():
     """Combine-leg coverage the dense-oracle cells can't give: (1) fused
     vs padded ep_moe_shardmap parity under *heavily skewed* hand-crafted

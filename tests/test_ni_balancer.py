@@ -5,7 +5,6 @@ try:
 except ImportError:  # pragma: no cover - deterministic replay shim
     from _hyp_fallback import given, settings, strategies as st
 
-from repro.core.er_mapping import er_mapping
 from repro.core.ni_balancer import (
     BalancerState,
     greedy_balance,
@@ -50,7 +49,6 @@ def test_topology_aware_shorter_moves_than_greedy():
     """Algorithm 1's destination choice minimizes hop distance; EPLB-greedy
     ignores it. Average migration distance must not be larger."""
     topo = MeshTopology(4, 4)
-    m = er_mapping(topo, 4, 4)
     dist = lambda a, b: topo.hops(topo.coord(a), topo.coord(b))
     s1, s2 = _skewed_state(32, 16, 3, seed=1), _skewed_state(32, 16, 3, seed=1)
     topo_migs = topology_aware_balance(s1, dist)

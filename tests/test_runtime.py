@@ -15,7 +15,6 @@ from repro.runtime.optimizer import (
     adamw_init,
     adamw_update,
     cosine_lr,
-    global_norm,
 )
 from repro.parallel.ctx import NO_MESH
 from repro.runtime.train import init_state, make_train_step

@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
@@ -62,7 +61,7 @@ def test_xlstm_stays_replicated():
 
 def test_full_tree_specs_match_structure():
     """Every param leaf gets a spec of matching rank, for every arch."""
-    from repro.configs import ARCHS, smoke
+    from repro.configs import ARCHS
 
     ctx = ParallelCtx()
     object.__setattr__(ctx, "mesh", None)

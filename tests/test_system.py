@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import get_config, smoke
 from repro.models import transformer as T
-from repro.parallel.ctx import NO_MESH, ParallelCtx
+from repro.parallel.ctx import NO_MESH
 from repro.runtime.checkpoint import CheckpointManager
 from repro.runtime.data import DataConfig, SyntheticLM
 from repro.runtime.optimizer import AdamWConfig

@@ -1,8 +1,7 @@
 import numpy as np
-import pytest
 
 from repro.core.er_mapping import baseline_mapping, er_mapping
-from repro.core.hardware import DGX, NVL72, WSC
+from repro.core.hardware import DGX, WSC
 from repro.core.simulator import (
     ClusterSystem,
     WSCSystem,

@@ -144,6 +144,56 @@ np.testing.assert_allclose(
 print("kernel smoke OK")
 EOF
 
+echo "== serving chaos smoke (seeded fault injection) =="
+python - <<'EOF'
+# Continuous-batching loop under a seeded fault plan: pool pressure forces
+# preemption, a NaN step forces a requeue-and-recompute — every request
+# must finish with tokens bit-identical to its sequential fault-free run.
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config, smoke
+from repro.models import transformer as T
+from repro.parallel.ctx import ParallelCtx
+from repro.runtime.faults import Fault, FaultPlan, NAN_LOGITS, POOL_PRESSURE, POOL_RELEASE
+from repro.runtime.scheduler import FINISHED, RequestScheduler
+from repro.runtime.serve import Server, ServeConfig
+
+cfg = smoke(get_config("llama3.2-1b"))
+params = T.init_params(jax.random.PRNGKey(0), cfg)
+ctx = ParallelCtx()
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+           for n in (5, 9, 6)]
+
+def sched_for(batch, pool, faults=None):
+    srv = Server(cfg, ctx, jax.tree.map(jnp.copy, params),
+                 ServeConfig(max_seq=64, batch=batch, paged=True,
+                             page_size=8, pool_pages=pool))
+    return RequestScheduler(srv, faults=faults)
+
+ref = []
+for p in prompts:
+    s = sched_for(1, 64)
+    r = s.submit(p, max_new_tokens=6)
+    s.run()
+    assert r.state == FINISHED, (r.state, r.error)
+    ref.append(list(r.tokens_out))
+
+plan = FaultPlan([
+    Fault(step=2, kind=POOL_PRESSURE, pages=4),
+    Fault(step=3, kind=NAN_LOGITS, slots=(0,)),
+    Fault(step=7, kind=POOL_RELEASE, pages=4),
+])
+s = sched_for(2, 8, faults=plan)
+reqs = [s.submit(p, max_new_tokens=6, arrival=i) for i, p in enumerate(prompts)]
+s.run()
+assert s.n_preempted > 0, "fault plan should have forced a preemption"
+for i, r in enumerate(reqs):
+    assert r.state == FINISHED, (i, r.state, r.error)
+    assert list(r.tokens_out) == ref[i], (i, r.tokens_out, ref[i])
+print(f"chaos smoke OK ({s.n_preempted} preemptions, parity held)")
+EOF
+
 echo "== kernel-dispatch bench smoke (interpret mode) =="
 python benchmarks/bench_kernels.py --smoke > /dev/null
 echo "bench smoke OK"

@@ -125,7 +125,8 @@ SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
 
 def shapes_for(cfg: ModelConfig) -> list[ShapeConfig]:
     """The shape cells applicable to an architecture. ``long_500k`` needs
-    sub-quadratic attention (see DESIGN.md §5)."""
+    sub-quadratic attention (an O(L^2) full-attention pass cannot fit the
+    524k context)."""
     out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
     if cfg.subquadratic:
         out.append(LONG_500K)

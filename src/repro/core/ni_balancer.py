@@ -116,6 +116,19 @@ class BalancerState:
     def mark_dead(self, device: int) -> None:
         self.dead.add(device)
 
+    def drop_device(self, device: int) -> int:
+        """Forget a dead device's replicas wherever another replica
+        survives, so routing never targets it again. Experts whose *only*
+        copy sits on ``device`` keep that entry (every expert must retain
+        >= 1 replica; run ``evacuate`` first so no such orphan exists).
+        Returns the number of dropped replicas."""
+        n = 0
+        for e in range(self.n_experts):
+            if device in self.replicas[e] and len(self.replicas[e]) > 1:
+                self.replicas[e] = [d for d in self.replicas[e] if d != device]
+                n += 1
+        return n
+
     def apply(self, mig: Migration) -> None:
         e, src, dst = mig
         assert src in self.replicas[e]

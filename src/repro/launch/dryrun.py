@@ -312,7 +312,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mapping: str) -> dict:
     shape = SHAPES[shape_name]
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
     if shape_name == "long_500k" and not cfg.subquadratic:
-        rec["status"] = "SKIP (full attention; see DESIGN.md §5)"
+        rec["status"] = "SKIP (full attention cannot fit the 524k context)"
         return rec
     multi_pod = mesh_kind == "multi"
     mesh = (

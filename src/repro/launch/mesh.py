@@ -4,7 +4,9 @@
 multi-pod). ``make_er_mesh`` applies the paper's Entwined Ring Mapping as a
 *device-order permutation*: the logical ("data","model") axes are identical,
 but TP groups land entwined on the physical torus so the model-axis rings
-and the EP all-to-all traffic follow the paper's placement (DESIGN.md §3).
+and the EP all-to-all traffic follow the paper's placement (the hop-distance
+model this induces also drives the serving-side balancer — see
+docs/serving.md, "Placement & topology").
 
 Functions, not module constants — importing this module never touches jax
 device state.

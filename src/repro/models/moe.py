@@ -28,6 +28,7 @@ from repro.parallel.collectives import (
     bucket_dispatch,
     combine_from_rows,
     dispatch_metadata,
+    ep_moe_local,
     ep_moe_shardmap,
     esp_expert_ffn,
     kept_counts,
@@ -84,8 +85,21 @@ def _aux(loss, ids, cfg: ModelConfig) -> dict:
 # dense oracle
 # ---------------------------------------------------------------------------
 
-def moe_dense(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
+def _mask_ids(ids, token_mask, cfg: ModelConfig):
+    """Route masked tokens (empty serving slots) to the out-of-range expert
+    id E: every dispatch drops the sentinel (and ``one_hot`` zeroes it), so
+    dead batch rows consume no bucket capacity, contribute zero output and
+    never pollute the balancer's expert counts."""
+    if token_mask is None:
+        return ids
+    return jnp.where(token_mask[..., None], ids, cfg.n_experts)
+
+
+def moe_dense(
+    p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx, token_mask=None
+):
     ids, w, aux = route(p, x, cfg)
+    ids = _mask_ids(ids, token_mask, cfg)
     h = jnp.einsum("...d,edf->...ef", x, p["w_gate"])
     u = jnp.einsum("...d,edf->...ef", x, p["w_up"])
     y = jnp.einsum("...ef,efd->...ed", jax.nn.silu(h) * u, p["w_down"])
@@ -99,7 +113,9 @@ def moe_dense(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
 # ESP: expert-sharded FFN, local bucketing, all-reduce combine
 # ---------------------------------------------------------------------------
 
-def moe_esp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
+def moe_esp(
+    p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx, token_mask=None
+):
     """Experts' hidden dims sharded over the model axis (GSPMD handles the
     partial-sum all-reduce of w_down). Tokens are bucketed per expert so
     FLOPs stay ~topk * capacity_factor, not n_experts.
@@ -111,6 +127,7 @@ def moe_esp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx):
     redundant expert FLOPs x n_batch and a giant dispatch all-gather (see
     EXPERIMENTS.md §Perf, mixtral hillclimb)."""
     ids, w, aux = route(p, x, cfg)
+    ids = _mask_ids(ids, token_mask, cfg)
     b, s, d = x.shape
     k = cfg.experts_per_token
     e = cfg.n_experts
@@ -203,8 +220,10 @@ def moe_ep(
     placement: tuple[jax.Array, jax.Array] | None = None,
     slot_weights: dict | None = None,
     slots_per_device: int | None = None,
+    token_mask=None,
 ):
-    """Expert-parallel dispatch over the model axis.
+    """Expert-parallel dispatch over the model axis (or, with no mesh, the
+    local single-process equivalent — see ``ep_moe_local``).
 
     ``placement`` is (slot_of, n_replicas); default = native homes. For
     serving with shadow slots the Server owns ``slot_weights`` (n_slots
@@ -252,18 +271,32 @@ def moe_ep(
         slot_of, n_replicas = placement
 
     ids, w, aux = route(p, x, cfg)
-    out = ep_moe_shardmap(
-        x,
-        ids,
-        w,
-        slot_weights,
-        slot_of,
-        n_replicas,
-        ctx,
-        ctx.capacity_factor,
-        slots_per_device,
-        decode=x.shape[1] == 1,
-    )
+    ids = _mask_ids(ids, token_mask, cfg)
+    if ctx.mesh is None:
+        out = ep_moe_local(
+            x,
+            ids,
+            w,
+            slot_weights,
+            slot_of,
+            n_replicas,
+            ctx,
+            ctx.capacity_factor,
+            n_slots,
+        )
+    else:
+        out = ep_moe_shardmap(
+            x,
+            ids,
+            w,
+            slot_weights,
+            slot_of,
+            n_replicas,
+            ctx,
+            ctx.capacity_factor,
+            slots_per_device,
+            decode=x.shape[1] == 1,
+        )
     return out, _aux(aux, ids, cfg)
 
 
@@ -273,7 +306,11 @@ def moe_apply(
     cfg: ModelConfig,
     ctx: ParallelCtx,
     placement=None,
+    token_mask=None,
 ):
+    """``token_mask`` (bool, broadcastable to ``x.shape[:-1]``): False rows
+    are dead serving slots — they route nowhere (no bucket capacity spent,
+    zero MoE output, excluded from the balancer counts)."""
     impl = ctx.moe_impl
     if impl == "auto":
         if ctx.mesh is None:
@@ -285,9 +322,9 @@ def moe_apply(
             # E/D < 1: ESP — the paper's choice for few-large-expert models.
             impl = "esp"
     if impl == "dense":
-        return moe_dense(p, x, cfg, ctx)
+        return moe_dense(p, x, cfg, ctx, token_mask=token_mask)
     if impl == "esp":
-        return moe_esp(p, x, cfg, ctx)
+        return moe_esp(p, x, cfg, ctx, token_mask=token_mask)
     if impl == "ep":
-        return moe_ep(p, x, cfg, ctx, placement)
+        return moe_ep(p, x, cfg, ctx, placement, token_mask=token_mask)
     raise ValueError(f"unknown moe impl {impl!r}")

@@ -377,8 +377,15 @@ def decode_step(
     ctx: ParallelCtx = NO_MESH,
     embeds=None,                # encdec: unused at decode (cross kv cached)
     placement=None,             # (slot_of, n_replicas) from the NI-Balancer
+    slot_mask=None,             # (B,) bool — False = empty/released batch row
 ):
-    """One serve step: consume one token, update the cache, emit logits."""
+    """One serve step: consume one token, update the cache, emit logits.
+
+    ``slot_mask`` marks live batch rows for continuous batching: masked
+    rows still flow through the step (fixed shapes, no recompile) but are
+    excluded from MoE routing, so a half-empty batch never spends expert
+    bucket capacity on dead slots. Their logits are garbage by contract —
+    the scheduler owns which rows mean anything."""
     x = _embed(params, token, cfg, ctx)
     pos = cache["pos"]
     pat = cfg.block_pattern
@@ -395,7 +402,10 @@ def decode_step(
             h = h + o
             z2 = rms_norm(h, p_l["ln2"], cfg.norm_eps)
             if cfg.is_moe:
-                y, a = moe_apply(p_l["moe"], z2, cfg, ctx, placement=placement)
+                y, a = moe_apply(
+                    p_l["moe"], z2, cfg, ctx, placement=placement,
+                    token_mask=None if slot_mask is None else slot_mask[:, None],
+                )
             else:
                 y, a = mlp_apply(p_l["mlp"], z2, ctx), zero_aux(cfg)
             return (h + y, jax.tree.map(jnp.add, a_sum, a)), c_new
@@ -628,7 +638,14 @@ def prefill(
         cache["cross_kv"] = kvs
 
     cache["pos"] = jnp.asarray(s, jnp.int32)
-    logits = _logits(params, x[:, -1:], cfg, ctx)
+    if lengths is not None:
+        # Ragged right-padded prompts: each request's next-token logits
+        # live at its true last position, not the padded batch tail.
+        last = jnp.clip(lengths.astype(jnp.int32) - 1, 0, s - 1)
+        x = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    else:
+        x = x[:, -1:]
+    logits = _logits(params, x, cfg, ctx)
     return logits, cache
 
 

@@ -185,12 +185,23 @@ def choose_slots(
     expert_ids: jax.Array,   # (n, k) logical expert per copy
     slot_of: jax.Array,      # (E, R_max) physical slot table
     n_replicas: jax.Array,   # (E,) live replica count per expert
+    sentinel: int | None = None,
 ) -> jax.Array:
-    """Pick a physical slot per copy, round-robin over live replicas."""
+    """Pick a physical slot per copy, round-robin over live replicas.
+
+    ``sentinel`` handles out-of-range expert ids (>= E — the routing mask
+    for empty serving slots): their copies map to ``sentinel`` (pick one
+    past every real bucket) so dispatch drops them, instead of the default
+    clip-gather silently stealing a live expert's slot and capacity."""
     n, k = expert_ids.shape
+    e = slot_of.shape[0]
+    safe = jnp.minimum(expert_ids, e - 1)
     copy_idx = (jnp.arange(n * k) % 997).reshape(n, k)  # cheap spread
-    r = copy_idx % n_replicas[expert_ids]
-    return slot_of[expert_ids, r]
+    r = copy_idx % n_replicas[safe]
+    slots = slot_of[safe, r]
+    if sentinel is not None:
+        slots = jnp.where(expert_ids < e, slots, sentinel)
+    return slots
 
 
 def uniform_placement(n_experts: int, n_slots: int, r_max: int = 4):
@@ -355,7 +366,9 @@ def ep_moe_shardmap(
         eid = eid_blk.reshape(bl * sl, k)
         w = w_blk.reshape(bl * sl, k)
 
-        slots = choose_slots(eid, slot_of_, n_rep_)           # physical slot
+        # Physical slot per copy; masked tokens (expert id E sentinel from
+        # moe_apply's token_mask) overflow out of every bucket.
+        slots = choose_slots(eid, slot_of_, n_rep_, sentinel=total_slots + 1)
         if decode:
             # Tokens are replicated across the EP axis: rank r owns
             # idx % ep == r; unowned copies overflow out of every bucket.
@@ -480,6 +493,46 @@ def ep_moe_shardmap(
         slot_of,
         n_replicas,
     )
+
+
+def ep_moe_local(
+    x: jax.Array,            # (B, S, d)
+    expert_ids: jax.Array,   # (B, S, k) — may carry the E sentinel (masked)
+    weights: jax.Array,      # (B, S, k)
+    slot_weights: dict,      # expert slot params, leading dim = total slots
+    slot_of: jax.Array,      # (E, R_max)
+    n_replicas: jax.Array,   # (E,)
+    ctx: ParallelCtx,
+    capacity_factor: float,
+    total_slots: int,
+):
+    """Single-process EP dispatch (no mesh): the same slot-table routing,
+    fixed-capacity bucketing and ragged grouped FFN as ``ep_moe_shardmap``,
+    minus the all_to_all — every slot is local, so the exchange is the
+    identity. This is what lets the NI-Balancer run for real on one
+    process (``ServeConfig.virtual_ep``): replica routing, migrations and
+    evacuations move actual weight rows between slot rows; only the
+    inter-device hop is notional."""
+    b, s, d = x.shape
+    k = expert_ids.shape[-1]
+    n = b * s
+    xt = x.reshape(n, d)
+    eid = expert_ids.reshape(n, k)
+    w = weights.reshape(n, k)
+    cap = bucket_capacity(n, k, capacity_factor, total_slots)
+    slots = choose_slots(eid, slot_of, n_replicas, sentinel=total_slots + 1)
+    bufs, pos, keep = bucket_dispatch(xt, slots, total_slots, cap)
+    counts = kept_counts(slots, keep, total_slots)
+    y = registry.expert_ffn(
+        bufs,
+        slot_weights["w_gate"],
+        slot_weights["w_up"],
+        slot_weights["w_down"],
+        group_sizes=counts,
+        enabled=ctx.kernels_on,
+    )
+    out = bucket_combine(y, slots, pos, keep, w)
+    return out.reshape(b, s, d)
 
 
 # ---------------------------------------------------------------------------

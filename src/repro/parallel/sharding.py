@@ -9,8 +9,9 @@ One rule table drives all ten architectures. Conventions:
   only sharded when it divides evenly (``_ok``), otherwise it degrades to
   replication — this is what makes restore-onto-any-mesh and odd global
   batches (long_500k's batch=1) work without special cases.
-* xLSTM blocks keep weights replicated (attention-free 350M model — DP-only
-  is the right layout; see DESIGN.md §5).
+* xLSTM blocks keep weights replicated (attention-free 350M model: the
+  weights are small enough that model-axis collectives would cost more than
+  they save — DP-only is the right layout).
 
 ``state_specs`` covers the train state (params + AdamW moments mirror the
 param layout), ``cache_specs`` mirrors ``transformer.init_cache``.

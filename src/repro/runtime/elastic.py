@@ -75,27 +75,25 @@ def drill_failure(server, device: int, steps_to_recover: int = 5) -> dict:
     if state is None:
         return {"supported": False}
     before = float(np.max(state.heats()[np.isfinite(state.heats())]))
-    from repro.core.ni_balancer import evacuate, topology_aware_balance
+    from repro.core.ni_balancer import topology_aware_balance
 
-    # Availability first (replicate orphaned experts), then rebalance load.
-    plan = evacuate(state, device, server.distance)
-    # evacuate() already applied to the balancer state; mirror the slot
-    # table + weight copies on the server.
-    for m in plan:
-        server._mirror_migration(m)
+    # Availability first: Server.mark_dead runs the whole evacuation path
+    # (state + physical weight rows + routing-table drop). Then rebalance
+    # the surviving devices for load.
+    plan = server.mark_dead(device)
     migs = topology_aware_balance(state, server.distance)
-    for m in migs:
-        server._apply_migration(m)
+    applied = sum(server._apply_migration(m) for m in migs)
     heats = state.heats()
     after = float(np.max(heats[np.isfinite(heats)]))
+    # The availability invariant: every expert keeps at least one replica
+    # on a live device (only an out-of-slots evacuation can violate it).
     evacuated = all(
-        any(d != device for d in state.replicas[e])
+        any(d not in state.dead for d in state.replicas[e])
         for e in range(state.n_experts)
-        if device in state.replicas[e]
     )
     return {
         "supported": True,
-        "migrations": len(plan) + len(migs),
+        "migrations": len(plan) + applied,
         "peak_before": before,
         "peak_after": after,
         "evacuated": evacuated,

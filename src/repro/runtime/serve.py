@@ -12,11 +12,18 @@ The ``Server`` owns
 Every decode step: route -> dispatch -> observe counts -> (Eq. 2 trigger)
 -> plan with Algorithm 1 -> apply placement (slot table update + expert
 weight row copy = the migration's data movement; its *schedule* across cold
-links is validated in the analytical evaluator — see DESIGN.md §3).
+links is validated in the analytical evaluator — see docs/serving.md).
 
-Device failures: ``mark_dead`` pins the device's heat to infinity, so the
-next balancing pass evacuates its experts to shadow slots elsewhere.
-Stragglers: per-device step-time EMAs scale heats, draining load away.
+Device failures: ``mark_dead`` evacuates orphaned experts (balancer state
+*and* physical weight rows) and drops the dead device's replicas from the
+routing table. Stragglers: per-device step-time EMAs scale heats, draining
+load away.
+
+Request-level serving (admission, preemption, retirement) lives one layer
+up in :mod:`repro.runtime.scheduler`; this module provides the slot-level
+substrate it drives (``empty_cache`` / ``prefill_into_slot`` / ``release``
+/ ``next_write_unbacked``). The full lifecycle is documented in
+docs/serving.md.
 """
 
 from __future__ import annotations
@@ -31,6 +38,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.ni_balancer import (
     BalancerState,
+    evacuate,
     should_trigger,
     topology_aware_balance,
 )
@@ -55,6 +63,20 @@ class ServeConfig:
     paged: bool = False
     page_size: int = A.PAGE_SIZE
     pool_pages: int | None = None  # None = fully backed (batch * NB)
+    # Virtual EP (single process, no mesh): treat the expert slots as if
+    # they were spread over this many logical devices, so the NI-Balancer —
+    # replica routing, migration, evacuation, straggler draining — runs for
+    # real (weight rows move between slot rows, routing tables update);
+    # only the inter-device hop is notional (collectives.ep_moe_local).
+    # Ignored under a real multi-device mesh (the model axis wins).
+    virtual_ep: int | None = None
+
+
+class SlotReleaseError(RuntimeError):
+    """``Server.release`` of a slot that holds no pages — a double release,
+    or a slot that was never admitted. Silently no-opping here (the old
+    behaviour) let lifecycle bugs surface much later as stale-table
+    corruption; failing at the call site names the culprit."""
 
 
 class PagePool:
@@ -107,6 +129,8 @@ class Server:
         self.scfg = serve_cfg
         self.params = params
         self.ep = ctx.n_model
+        if self.ep == 1 and serve_cfg.virtual_ep:
+            self.ep = serve_cfg.virtual_ep
         self.use_balancer = cfg.is_moe and self.ep > 1
         self.distance = distance or (lambda a, b: abs(a - b))
         self.t = 0
@@ -188,6 +212,15 @@ class Server:
             ),
             static_argnames=(),
         )
+        # Slot admission: splice one request's prefilled pool pages into the
+        # live batch cache (donates the big pool — no second copy resident).
+        self._splice_pages = jax.jit(
+            lambda bk, bv, sk, sv, idx: (
+                bk.at[:, idx].set(sk[:, idx]),
+                bv.at[:, idx].set(sv[:, idx]),
+            ),
+            donate_argnums=(0, 1),
+        )
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -253,8 +286,16 @@ class Server:
         re-allocated. The batch row keeps stepping (its writes land on the
         write-off page and its output is meaningless until re-admitted) —
         ``decode`` pins its length back to 0 each step so it never grows a
-        live prefix or new pages."""
-        self.page_pool.free(self._pages.pop(slot, []))
+        live prefix or new pages.
+
+        Raises :class:`SlotReleaseError` if the slot holds no pages
+        (double release / never admitted)."""
+        if slot not in self._pages:
+            raise SlotReleaseError(
+                f"release of slot {slot}, which holds no pages (already "
+                f"released, or never admitted)"
+            )
+        self.page_pool.free(self._pages.pop(slot))
         self._released.add(slot)
         self._tables[slot, :] = self.trash_page
         if self._written is not None:
@@ -272,6 +313,100 @@ class Server:
             jnp.asarray(self._tables), (n_layers, *self._tables.shape)
         ).copy()
 
+    # -- slot-level admission (continuous batching substrate) ----------------
+
+    def empty_cache(self) -> dict:
+        """A paged cache with every batch slot empty — the starting state
+        for slot-level admission (``prefill_into_slot``). All table rows
+        point at the write-off page, all lengths are 0, and any previously
+        admitted requests' pages go back to the pool."""
+        if not self.scfg.paged:
+            raise ValueError("empty_cache requires ServeConfig(paged=True)")
+        b = self.scfg.batch
+        for slot in list(self._pages):
+            self.release(slot)
+        self._released = set(range(b))
+        self._tables = np.full((b, self.n_blocks), self.trash_page, np.int32)
+        self._tables_dirty = False
+        self._written = np.zeros(b, np.int32)
+        self._pos = 0
+        return T.init_cache(
+            self.cfg,
+            b,
+            self.scfg.max_seq,
+            paged=True,
+            page_size=self.scfg.page_size,
+            n_pages=self.n_pool_pages,
+        )
+
+    def prefill_into_slot(self, slot: int, tokens, cache: dict, length=None):
+        """Admit one request into batch row ``slot`` of a *live* cache.
+
+        Runs the jitted prefill at batch 1 over this request alone (its
+        block table indexes the same shared pool id space), then splices
+        the request's pool pages, table row and length into ``cache`` —
+        the other batch rows are untouched, so admission happens mid-flight
+        without pausing or recomputing live requests.
+
+        ``length`` marks the true prompt length when ``tokens`` is
+        right-padded (jit-stable prompt buckets). Returns ``(logits,
+        cache)`` with logits at the request's true last prompt position
+        (``(1, 1, vocab)``).
+        """
+        if not self.scfg.paged:
+            raise ValueError("prefill_into_slot requires ServeConfig(paged=True)")
+        if slot in self._pages:
+            raise RuntimeError(
+                f"slot {slot} is still admitted; release it before reuse"
+            )
+        if self._written is None:
+            self._written = np.zeros(self.scfg.batch, np.int32)
+        tokens = jnp.asarray(tokens, jnp.int32).reshape(1, -1)
+        true_len = int(length if length is not None else tokens.shape[1])
+        cap = self.n_blocks * self.page_size
+        need = min(-(-min(true_len, cap) // self.page_size), self.n_blocks)
+        pages = self.page_pool.alloc(need)
+        row = np.full((1, self.n_blocks), self.trash_page, np.int32)
+        row[0, :need] = pages
+        logits, small = self._prefill(
+            self.params,
+            tokens,
+            embeds=None,
+            tables=jnp.asarray(row),
+            lengths=jnp.asarray([true_len], np.int32),
+        )
+        self._pages[slot] = pages
+        self._tables[slot] = row[0]
+        self._released.discard(slot)
+        self._written[slot] = true_len
+        self._tables_dirty = False
+        layers = dict(cache["layers"])
+        if need:
+            idx = jnp.asarray(pages)
+            layers["pool_k"], layers["pool_v"] = self._splice_pages(
+                layers["pool_k"],
+                layers["pool_v"],
+                small["layers"]["pool_k"],
+                small["layers"]["pool_v"],
+                idx,
+            )
+        layers["tables"] = self._stacked_tables(layers["tables"].shape[0])
+        layers["lengths"] = layers["lengths"].at[:, slot].set(true_len)
+        return logits, {**cache, "layers": layers}
+
+    def next_write_unbacked(self, slot: int) -> bool:
+        """Would this request's next decode write need a fresh pool page
+        (its block table doesn't back the target block yet)? The scheduler
+        sums this over live slots to preempt *before* ``_ensure_pages``
+        would hit pool exhaustion mid-step."""
+        cap = self.n_blocks * self.page_size
+        written = int(self._written[slot])
+        if self.cfg.sliding_window:
+            nxt = written % cap
+        else:
+            nxt = min(written, cap - 1)
+        return bool(self._tables[slot, nxt // self.page_size] == self.trash_page)
+
     def _ensure_pages(self, cache: dict) -> dict:
         """Allocate the page a request's next write lands on, if its block
         table doesn't back it yet (lazy per-request growth at block
@@ -283,18 +418,17 @@ class Server:
             # sync the mirror once, then track host-side. No pages to grow
             # (this Server's allocator doesn't own that cache's mapping).
             self._written = np.asarray(layers["lengths"][0]).copy()
-        written = self._written
         cap = self.n_blocks * self.page_size
         w = self.cfg.sliding_window or 0
         changed = self._tables_dirty   # release(slot) without a cache handle
         self._tables_dirty = False
         for slot in self._pages:
-            nxt = int(written[slot]) % cap if w else min(int(written[slot]), cap - 1)
-            blk = nxt // self.page_size
-            if self._tables[slot, blk] == self.trash_page:
+            if self.next_write_unbacked(slot):
+                written = int(self._written[slot])
+                nxt = written % cap if w else min(written, cap - 1)
                 (page,) = self.page_pool.alloc(1)
                 self._pages[slot].append(page)
-                self._tables[slot, blk] = page
+                self._tables[slot, nxt // self.page_size] = page
                 changed = True
         if not changed:
             return cache
@@ -331,8 +465,16 @@ class Server:
         placement = (
             (self.slot_of, self.n_replicas) if self.use_balancer else None
         )
+        slot_mask = None
+        if self.scfg.paged and self._released:
+            # Continuous batching: released/empty rows still step (fixed
+            # shapes) but are masked out of MoE routing so they never spend
+            # expert bucket capacity or skew the balancer's counts.
+            live = np.ones(token.shape[0], bool)
+            live[sorted(self._released)] = False
+            slot_mask = jnp.asarray(live)
         logits, cache, stats = self._decode(
-            self.params, token, cache, placement=placement
+            self.params, token, cache, placement=placement, slot_mask=slot_mask
         )
         if self.scfg.paged and self._written is not None:
             for slot in range(len(self._written)):
@@ -380,9 +522,7 @@ class Server:
         if not plan:
             return
         self.last_mig = self.t
-        for mig in plan:
-            self._apply_migration(mig)
-        self.migrations += len(plan)
+        self.migrations += sum(self._apply_migration(mig) for mig in plan)
 
     def _free_slot(self, device: int) -> int | None:
         spd = self.scfg.slots_per_device
@@ -397,36 +537,86 @@ class Server:
                 return s
         return None
 
-    def _apply_migration(self, mig, update_state: bool = True):
+    def _apply_migration(self, mig, update_state: bool = True) -> bool:
+        """Replicate expert ``e`` onto a free slot of device ``dst``.
+        Returns True iff the migration was physically applied; a no-op
+        (no free slot, or the expert is at its replica cap) leaves the
+        balancer state untouched too — applying the state half alone would
+        let the two placements diverge (the old behaviour at the cap
+        overwrote ``slot_of[e, -1]`` without retiring the old replica's
+        slot, leaking it from ``_free_slot``'s accounting forever)."""
         e, _src, dst = mig
         slot = self._free_slot(dst)
         if slot is None:
-            return
+            return False
+        r = int(np.asarray(self.n_replicas)[e])
+        if r >= self.slot_of.shape[1]:
+            return False           # replica cap: adding would leak a slot
         # Data movement: copy the expert's weight rows into the shadow slot
         # (a device-to-device transfer under the slot sharding).
         src_slot = int(np.asarray(self.slot_of)[e, 0])
         moe = self.params["layers"]["moe"]
         for w in ("w_gate", "w_up", "w_down"):
             moe[w] = moe[w].at[:, slot].set(moe[w][:, src_slot])
-        r = int(np.asarray(self.n_replicas)[e])
-        self.slot_of = self.slot_of.at[e, min(r, self.slot_of.shape[1] - 1)].set(slot)
-        self.n_replicas = self.n_replicas.at[e].set(
-            min(r + 1, self.slot_of.shape[1])
-        )
+        self.slot_of = self.slot_of.at[e, r].set(slot)
+        self.n_replicas = self.n_replicas.at[e].set(r + 1)
         if update_state:
             self.state.apply(mig)
+        return True
 
-    def _mirror_migration(self, mig):
+    def _mirror_migration(self, mig) -> bool:
         """Physical half only — for plans already applied to the balancer
         state (e.g. evacuation)."""
-        self._apply_migration(mig, update_state=False)
+        return self._apply_migration(mig, update_state=False)
 
     # -- fault tolerance ------------------------------------------------------
 
-    def mark_dead(self, device: int):
-        """Node failure: evacuate by rebalancing away from the dead device."""
-        if self.state is not None:
-            self.state.mark_dead(device)
+    def _drop_device_slots(self, device: int) -> None:
+        """Remove the dead device's slots from the routing table wherever
+        the expert has another replica (swap-with-last compaction; unused
+        tail columns point at a live replica, the table's convention)."""
+        spd = self.scfg.slots_per_device
+        slot_of = np.asarray(self.slot_of).copy()
+        n_rep = np.asarray(self.n_replicas).copy()
+        for e in range(self.cfg.n_experts):
+            i = 0
+            while i < n_rep[e]:
+                if slot_of[e, i] // spd == device and n_rep[e] > 1:
+                    n_rep[e] -= 1
+                    slot_of[e, i] = slot_of[e, n_rep[e]]
+                else:
+                    i += 1
+            slot_of[e, n_rep[e]:] = slot_of[e, 0]
+        self.slot_of = jnp.asarray(slot_of)
+        self.n_replicas = jnp.asarray(n_rep)
+
+    def mark_dead(self, device: int) -> list:
+        """Node failure — the full evacuation path:
+
+        1. ``evacuate`` pins the device's heat to infinity and plans (and
+           applies, state-side) a replica for every expert whose only live
+           copy sat on the dead device;
+        2. each plan entry is mirrored into physical weight movement
+           (``_mirror_migration``: slot-table update + expert row copy).
+           The rows are read from the dead device's slot — valid in this
+           logical simulation, where "death" means the scheduler stops
+           routing to the device but its HBM is still addressable; a real
+           wafer die failure would restore the rows from checkpoint shards
+           instead;
+        3. the dead device's replicas drop out of the routing table (server
+           *and* balancer state), so no token copy is dispatched to it
+           again.
+
+        Returns the evacuation plan (list of ``(expert, src, dst)``).
+        """
+        if self.state is None:
+            return []
+        plan = evacuate(self.state, device, self.distance)
+        for mig in plan:
+            self._mirror_migration(mig)
+        self._drop_device_slots(device)
+        self.state.drop_device(device)
+        return plan
 
     def report_step_time(self, device: int, ratio: float):
         """Straggler mitigation: fold measured step-time ratio into heats."""

@@ -1,0 +1,251 @@
+"""Fault-injection harness + Server fault-tolerance paths.
+
+FaultPlan determinism, named release errors, migration-cap no-op, the full
+mark_dead evacuation (weights, routing table, decode-after-death), straggler
+draining via report_step_time, and the virtual-EP local dispatch that makes
+all of it runnable on one process.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.models import moe as M
+from repro.models import transformer as T
+from repro.parallel.ctx import ParallelCtx
+from repro.runtime.faults import (
+    DEVICE_DEATH,
+    NAN_LOGITS,
+    POOL_PRESSURE,
+    Fault,
+    FaultPlan,
+)
+from repro.runtime.serve import Server, ServeConfig, SlotReleaseError
+from repro.core.ni_balancer import topology_aware_balance
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _moe_cfg(**kw):
+    base = dataclasses.replace(
+        smoke(get_config("dbrx-132b")), n_experts=4, experts_per_token=2
+    )
+    return dataclasses.replace(base, **kw)
+
+
+def _dense_cfg(**kw):
+    return dataclasses.replace(smoke(get_config("llama3.2-1b")), **kw)
+
+
+def _server(cfg, params, **scfg):
+    ctx = ParallelCtx(capacity_factor=8.0)
+    return Server(cfg, ctx, jax.tree.map(jnp.copy, params), ServeConfig(**scfg))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_seeded_deterministic():
+    a = FaultPlan.chaos(7, 20, n_devices=4, pressure_pages=5, nan_slots=(1,))
+    b = FaultPlan.chaos(7, 20, n_devices=4, pressure_pages=5, nan_slots=(1,))
+    assert repr(a) == repr(b) and len(a) == len(b) == 5
+    c = FaultPlan.chaos(8, 20, n_devices=4, pressure_pages=5, nan_slots=(1,))
+    assert repr(c) != repr(a)
+    # per-step lookup covers exactly the plan
+    assert sum(len(a.at(s)) for s in range(200)) == len(a)
+    kinds = {f.kind for f in a}
+    assert DEVICE_DEATH in kinds and POOL_PRESSURE in kinds and NAN_LOGITS in kinds
+
+
+def test_fault_kind_validated():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(step=0, kind="meteor_strike")
+
+
+def test_fault_plan_stable_order_within_step():
+    plan = FaultPlan([
+        Fault(step=3, kind=POOL_PRESSURE, pages=2),
+        Fault(step=3, kind=DEVICE_DEATH, device=1),
+    ])
+    assert [f.kind for f in plan.at(3)] == [DEVICE_DEATH, POOL_PRESSURE]
+    assert plan.at(4) == ()
+
+
+# ---------------------------------------------------------------------------
+# named lifecycle errors (satellite: release no longer a silent no-op)
+# ---------------------------------------------------------------------------
+
+def test_release_unknown_slot_raises():
+    cfg = _dense_cfg()
+    params = T.init_params(RNG, cfg)
+    srv = _server(cfg, params, max_seq=32, batch=2, paged=True, page_size=8,
+                  pool_pages=8)
+    with pytest.raises(SlotReleaseError, match="slot 0"):
+        srv.release(0)
+    cache = srv.empty_cache()
+    tokens = np.arange(5, dtype=np.int32)[None, :] % cfg.vocab_size
+    _, cache = srv.prefill_into_slot(1, tokens, cache)
+    cache = srv.release(1, cache)
+    with pytest.raises(SlotReleaseError, match="slot 1"):
+        srv.release(1, cache)
+
+
+# ---------------------------------------------------------------------------
+# migration replica cap (satellite: cap is a no-op, not an overwrite)
+# ---------------------------------------------------------------------------
+
+def test_apply_migration_replica_cap_is_noop():
+    cfg = _moe_cfg()
+    params = T.init_params(RNG, cfg)
+    # 6 virtual devices x 2 slots: experts 0..3 on devs 0-1, devs 2-5 free.
+    srv = _server(cfg, params, max_seq=32, batch=1, slots_per_device=2,
+                  virtual_ep=6)
+    r_max = srv.slot_of.shape[1]
+    for dst in (2, 3, 4):
+        assert srv._apply_migration((0, 0, dst))
+    assert int(srv.n_replicas[0]) == r_max
+    assert len(srv.state.replicas[0]) == r_max
+    table_before = np.asarray(srv.slot_of).copy()
+    w_before = np.asarray(srv.params["layers"]["moe"]["w_gate"]).copy()
+    # At the cap: must refuse, leaving table, weights AND balancer state
+    # untouched (the old behaviour overwrote slot_of[e, -1] and leaked the
+    # previous replica's slot from the free-slot accounting forever).
+    assert not srv._apply_migration((0, 0, 5))
+    assert int(srv.n_replicas[0]) == r_max
+    assert len(srv.state.replicas[0]) == r_max
+    np.testing.assert_array_equal(np.asarray(srv.slot_of), table_before)
+    np.testing.assert_array_equal(
+        np.asarray(srv.params["layers"]["moe"]["w_gate"]), w_before
+    )
+    # ...and the slot the no-op would have leaked is still allocatable.
+    assert srv._apply_migration((1, 0, 5))
+
+
+# ---------------------------------------------------------------------------
+# mark_dead: end-to-end evacuation (satellite test)
+# ---------------------------------------------------------------------------
+
+def test_mark_dead_moves_weights_and_routing():
+    cfg = _moe_cfg()
+    params = T.init_params(RNG, cfg)
+    # 4 virtual devices x 2 slots: dev0 = {e0, e1}, dev1 = {e2, e3};
+    # killing dev1 orphans e2 and e3.
+    srv = _server(cfg, params, max_seq=32, batch=2, slots_per_device=2,
+                  virtual_ep=4, paged=True, page_size=8, pool_pages=10)
+    spd = srv.scfg.slots_per_device
+    moe_before = {
+        w: np.asarray(srv.params["layers"]["moe"][w]).copy()
+        for w in ("w_gate", "w_up", "w_down")
+    }
+    plan = srv.mark_dead(1)
+    assert sorted(e for e, _, _ in plan) == [2, 3]
+    assert all(src == 1 and dst not in (1,) for _, src, dst in plan)
+    # Physical weight movement: the evacuated experts' rows now live in a
+    # slot of the destination device (slot s initially holds expert s).
+    slot_of = np.asarray(srv.slot_of)
+    n_rep = np.asarray(srv.n_replicas)
+    for e, _src, dst in plan:
+        live = [int(s) for s in slot_of[e, : n_rep[e]]]
+        landed = [s for s in live if s // spd == dst]
+        assert landed, f"expert {e} has no replica on destination {dst}"
+        for w in ("w_gate", "w_up", "w_down"):
+            np.testing.assert_array_equal(
+                np.asarray(srv.params["layers"]["moe"][w])[:, landed[0]],
+                moe_before[w][:, e],
+            )
+    # Routing: no table entry (including inert tail columns) targets dev 1.
+    assert not np.any(slot_of // spd == 1)
+    assert all(1 not in r for r in srv.state.replicas)
+    assert 1 in srv.state.dead and np.isinf(srv.state.heats()[1])
+    # The step loop survives the death: decode still runs and is finite.
+    cache = srv.empty_cache()
+    toks = np.arange(6, dtype=np.int32)[None, :] % cfg.vocab_size
+    logits, cache = srv.prefill_into_slot(0, toks, cache)
+    assert np.isfinite(np.asarray(logits)).all()
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    tok = jnp.pad(tok, ((0, 1), (0, 0)))
+    for _ in range(3):
+        logits, cache = srv.decode(tok, cache)
+        assert np.isfinite(np.asarray(logits[0])).all()
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+
+
+def test_mark_dead_without_orphans_still_drops_routing():
+    cfg = _moe_cfg()
+    params = T.init_params(RNG, cfg)
+    srv = _server(cfg, params, max_seq=32, batch=1, slots_per_device=2,
+                  virtual_ep=4)
+    # Replicate dev1's experts elsewhere first: death then orphans nothing.
+    assert srv._apply_migration((2, 1, 2))
+    assert srv._apply_migration((3, 1, 3))
+    plan = srv.mark_dead(1)
+    assert plan == []
+    assert not np.any(np.asarray(srv.slot_of) // 2 == 1)
+    assert all(1 not in r for r in srv.state.replicas)
+
+
+# ---------------------------------------------------------------------------
+# straggler draining (satellite test)
+# ---------------------------------------------------------------------------
+
+def test_report_step_time_scales_heat_and_drains():
+    cfg = _moe_cfg()
+    params = T.init_params(RNG, cfg)
+    srv = _server(cfg, params, max_seq=32, batch=1, slots_per_device=2,
+                  virtual_ep=4)
+    state = srv.state
+    base = state.heats().copy()
+    srv.report_step_time(1, 5.0)
+    once = state.heats()
+    assert once[1] == pytest.approx(base[1] * (0.8 + 0.2 * 5.0))
+    assert once[0] == pytest.approx(base[0])  # healthy devices untouched
+    for _ in range(30):  # EMA converges to the measured ratio
+        srv.report_step_time(1, 5.0)
+    assert state.slowdown[1] == pytest.approx(5.0, rel=1e-3)
+    # The balancer now drains the straggler: first migration moves load
+    # off device 1 (the hottest once the slowdown multiplier applies).
+    migs = topology_aware_balance(state, srv.distance)
+    assert migs and migs[0][1] == 1
+
+
+# ---------------------------------------------------------------------------
+# virtual EP substrate: local dispatch parity + masked-token routing
+# ---------------------------------------------------------------------------
+
+def test_virtual_ep_generate_matches_dense():
+    """ep_moe_local + slot-expanded weights + live migrations must be
+    numerically identical to the dense MoE reference (replicas are exact
+    copies; only the placement changes)."""
+    cfg = _moe_cfg()
+    params = T.init_params(RNG, cfg)
+    prompt = jnp.ones((2, 6), jnp.int32)
+    out_dense = _server(cfg, params, max_seq=32, batch=2).generate(prompt, 8)
+    srv = _server(cfg, params, max_seq=32, batch=2, slots_per_device=3,
+                  virtual_ep=4, alpha=0.1)  # eager balancer: migrate live
+    out_vep = srv.generate(prompt, 8)
+    assert srv.use_balancer and srv.migrations > 0
+    assert np.array_equal(np.asarray(out_dense), np.asarray(out_vep))
+
+
+def test_token_mask_zeroes_dead_rows():
+    """Masked (released-slot) rows produce zero MoE output, spend no
+    bucket capacity, and drop out of the balancer counts."""
+    cfg = _moe_cfg()
+    p = M.moe_init(RNG, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 1, cfg.d_model))
+    mask = jnp.asarray([True, False, True, False])[:, None]
+    ctx = ParallelCtx(capacity_factor=8.0)
+    full, aux_full = M.moe_dense(p, x, cfg, ctx)
+    out, aux = M.moe_dense(p, x, cfg, ctx, token_mask=mask)
+    np.testing.assert_array_equal(np.asarray(out[1]), 0)
+    np.testing.assert_array_equal(np.asarray(out[3]), 0)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(full[0]),
+                               rtol=1e-6, atol=1e-6)
+    counts_full = np.asarray(aux_full["counts"])
+    counts = np.asarray(aux["counts"])
+    assert counts.sum() == counts_full.sum() / 2  # 2 of 4 rows masked

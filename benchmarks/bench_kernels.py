@@ -58,10 +58,11 @@ Usage::
     PYTHONPATH=src python benchmarks/bench_kernels.py --smoke   # CI gate
     PYTHONPATH=src python benchmarks/bench_kernels.py --check BENCH_kernels.json
 
-``--smoke`` runs one tiny FFN cell + one tiny decode cell with 2
-iterations (interpret mode on CPU) and exits non-zero on any parity
-failure — a kernel-dispatch or paged-decode regression fails the gate
-even when the full parity suite isn't run.
+``--smoke`` runs one tiny FFN cell + one tiny decode cell + one tiny
+stepped-migration cell with 2 iterations (interpret mode on CPU) and exits
+non-zero on any parity failure — a kernel-dispatch, paged-decode or
+sliced-copy regression fails the gate even when the full parity suite
+isn't run.
 
 ``--check BASELINE.json`` recomputes every **deterministic** column (shape
 metadata, FLOP accounting, per-leg HBM-byte accounting — not wall-clock,
@@ -133,6 +134,20 @@ DECODE_SHAPES = [
     ("decode_ragged", 4, 2048, [128, 256, 512, 1024], 2, 8, 128, 128),
 ]
 DECODE_SMOKE_SHAPES = [("decode_smoke", 2, 64, [20, 48], 2, 4, 16, 16)]
+
+# Live stepped migration cells: (name, L, n_slots, D, F, n_slices, n_tok).
+# One cell = one in-flight expert migration sliced over n_slices decode
+# ticks (the MigrationDriver's per-tick _copy_row_slice on all three slot
+# tensors) riding a decode-step-sized expert FFN. The accounting columns
+# (slice/expert bytes, tick counts) are deterministic and CI-gated; the
+# wall columns — including migration_exposed_ms, the per-tick cost the
+# decode step cannot hide = (step + slice) − step — are not.
+MIGRATION_SHAPES = [
+    ("mig_smoke_4x64", 2, 4, 64, 128, 4, 64),
+    ("mig_ep_8x128", 4, 8, 128, 256, 4, 128),
+    ("mig_finegrain_8x128", 4, 8, 128, 256, 8, 128),
+]
+MIGRATION_SMOKE_SHAPES = [("mig_smoke", 2, 4, 16, 32, 4, 16)]
 
 
 def _skewed_counts(g: int, c: int, seed: int) -> np.ndarray:
@@ -256,6 +271,39 @@ def decode_cell_accounting(name, b, max_seq, lengths, kv, h, hd, bs):
     }
     ratio = round(dense_mb / paged_mb, 3)
     return meta, paths, ratio
+
+
+def migration_cell_accounting(name, layers, s, d, f, n_slices, n_tok):
+    """Deterministic columns of one stepped-migration cell: the byte/tick
+    schedule the MigrationDriver produces for one expert move. Gated by
+    ``--check``; the wall columns are not."""
+    itemsize = np.dtype(np.float32).itemsize
+    # Rows axis is axis 2 of every slot tensor: d for w_gate/w_up, f for
+    # w_down — the driver chunks each tensor independently.
+    chunks = {
+        "w_gate": (-(-d // n_slices), f),
+        "w_up": (-(-d // n_slices), f),
+        "w_down": (-(-f // n_slices), d),
+    }
+    expert_bytes = layers * (2 * d * f + f * d) * itemsize
+    slice_bytes = sum(
+        layers * rows * cols * itemsize for rows, cols in chunks.values()
+    )
+    return {
+        "shape": name,
+        "L": layers,
+        "n_slots": s,
+        "D": d,
+        "F": f,
+        "tokens_per_step": n_tok,
+        "n_slices": n_slices,
+        "slice_rows": {k: rows for k, (rows, _) in chunks.items()},
+        "expert_mb": round(expert_bytes / 1e6, 4),
+        "slice_mb": round(slice_bytes / 1e6, 4),
+        # one commit tick after the last slice tick (the atomic table swap
+        # happens at the next step boundary).
+        "ticks_to_commit": n_slices + 1,
+    }
 
 
 def _time(fn, *args, iters: int = 20, warmup: int = 3) -> float:
@@ -430,6 +478,81 @@ def run_decode(iters: int = 20, smoke: bool = False) -> list[dict]:
     return rows
 
 
+def run_migration(iters: int = 20, smoke: bool = False) -> list[dict]:
+    """Stepped-migration overlap cells: per-tick weight-slice copy riding a
+    decode-step-sized expert FFN.
+
+    ``migration_exposed_ms`` = wall(step + slice copies) − wall(step): the
+    per-tick migration cost the decode compute does *not* hide. On TPU the
+    copy overlaps the step's MXU work and this approaches 0; interpret/CPU
+    numbers are semantics-only, like every other wall column here."""
+    dtype = jnp.float32
+    rows = []
+    for name, layers, s, d, f, n_slices, n_tok in (
+        MIGRATION_SMOKE_SHAPES if smoke else MIGRATION_SHAPES
+    ):
+        ks = jax.random.split(jax.random.PRNGKey(zlib.crc32(name.encode())), 4)
+        wg = jax.random.normal(ks[0], (layers, s, d, f), dtype) * 0.1
+        wu = jax.random.normal(ks[1], (layers, s, d, f), dtype) * 0.1
+        wd = jax.random.normal(ks[2], (layers, s, f, d), dtype) * 0.1
+        x = jax.random.normal(ks[3], (n_tok, d), dtype)
+        meta = migration_cell_accounting(name, layers, s, d, f, n_slices, n_tok)
+        src, dst = 0, s - 1
+        chunks = {"w_gate": -(-d // n_slices), "w_down": -(-f // n_slices)}
+        chunks["w_up"] = chunks["w_gate"]
+
+        def ffn(x, wg, wu, wd):
+            # decode-step stand-in: the batch's tokens through one slot's
+            # SwiGLU FFN per layer (what one EP rank computes per tick).
+            h = jnp.einsum("td,ldf->ltf", x, wg[:, src])
+            u = jnp.einsum("td,ldf->ltf", x, wu[:, src])
+            return jnp.einsum("ltf,lfd->ltd", jax.nn.silu(h) * u, wd[:, src])
+
+        def one_slice(i, wg, wu, wd):
+            # Mirrors migration_driver._copy_row_slice (undonated here so
+            # the timed function can be re-invoked on the same buffers).
+            out = []
+            for w, rows_ in ((wg, chunks["w_gate"]), (wu, chunks["w_up"]),
+                             (wd, chunks["w_down"])):
+                total = w.shape[2]
+                lo = max(0, min(i * rows_, total - rows_))
+                blk = jax.lax.dynamic_slice(
+                    w, (0, src, lo, 0), (w.shape[0], 1, rows_, w.shape[3])
+                )
+                out.append(jax.lax.dynamic_update_slice(w, blk, (0, dst, lo, 0)))
+            return tuple(out)
+
+        step_fn = jax.jit(ffn)
+        step_plus_slice_fn = jax.jit(
+            lambda x, wg, wu, wd: (ffn(x, wg, wu, wd), one_slice(0, wg, wu, wd))
+        )
+
+        # Parity: n_slices slice copies must land the whole expert exactly.
+        cg, cu, cd = wg, wu, wd
+        for i in range(n_slices):
+            cg, cu, cd = jax.jit(lambda g, u, dn, i=i: one_slice(i, g, u, dn))(
+                cg, cu, cd
+            )
+        for full, copied, label in ((wg, cg, "w_gate"), (wu, cu, "w_up"),
+                                    (wd, cd, "w_down")):
+            np.testing.assert_array_equal(
+                np.asarray(copied[:, dst]), np.asarray(full[:, src]),
+                err_msg=f"{name}:{label} sliced copy != whole expert",
+            )
+
+        step_ms = _time(step_fn, x, wg, wu, wd, iters=iters) * 1e3
+        both_ms = _time(step_plus_slice_fn, x, wg, wu, wd, iters=iters) * 1e3
+        rows.append(
+            {
+                **meta,
+                "step_wall_ms": round(step_ms, 3),
+                "step_plus_slice_wall_ms": round(both_ms, 3),
+                "migration_exposed_ms": round(max(0.0, both_ms - step_ms), 3),
+            }
+        )
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # baseline regression gate (--check)
 # ---------------------------------------------------------------------------
@@ -499,6 +622,22 @@ def check_baseline(baseline_path: str) -> list[str]:
                 cmp(f"decode_shapes[{name}].paths.{pname}", key, prow.get(key), val)
     for name in set(base_dec) - set(expected):
         failures.append(f"decode_shapes[{name}]: in baseline but no longer benchmarked")
+
+    base_mig = {r.get("shape"): r for r in base.get("migration_shapes", [])}
+    expected = []
+    for name, layers, s, d, f, n_slices, n_tok in MIGRATION_SHAPES:
+        expected.append(name)
+        meta = migration_cell_accounting(name, layers, s, d, f, n_slices, n_tok)
+        row = base_mig.get(name)
+        if row is None:
+            failures.append(f"migration_shapes[{name}]: missing from baseline")
+            continue
+        for key, val in meta.items():
+            cmp(f"migration_shapes[{name}]", key, row.get(key), val)
+    for name in set(base_mig) - set(expected):
+        failures.append(
+            f"migration_shapes[{name}]: in baseline but no longer benchmarked"
+        )
     return failures
 
 
@@ -544,6 +683,7 @@ def main() -> None:
     try:
         rows = run(iters=iters, smoke=args.smoke)
         decode_rows = run_decode(iters=iters, smoke=args.smoke)
+        migration_rows = run_migration(iters=iters, smoke=args.smoke)
     except AssertionError as e:  # parity failure must fail the gate loudly
         print(f"KERNEL PARITY FAILURE: {e}", file=sys.stderr)
         raise SystemExit(1)
@@ -576,12 +716,20 @@ def main() -> None:
             "input/output. decode_shapes compare dense masked flash-decode "
             "(streams B*max_seq KV rows/step) against the paged "
             "block-table kernel (streams only live pages): kv_hbm_mb "
-            "tracks context length, not max_seq. The deterministic columns "
-            "are CI-gated: bench_kernels.py --check BENCH_kernels.json "
-            "recomputes them and fails on drift."
+            "tracks context length, not max_seq. migration_shapes measure "
+            "live stepped expert migration: one per-tick weight-row slice "
+            "copy (dynamic_slice/dynamic_update_slice per tensor, the same "
+            "program runtime.migration_driver issues) dispatched alongside a "
+            "decode-step-sized expert FFN; migration_exposed_ms = "
+            "wall(step + slice) - wall(step) is the per-tick cost decode "
+            "compute does not hide, and slice_mb / expert_mb / "
+            "ticks_to_commit are the deterministic accounting. The "
+            "deterministic columns are CI-gated: bench_kernels.py --check "
+            "BENCH_kernels.json recomputes them and fails on drift."
         ),
         "shapes": rows,
         "decode_shapes": decode_rows,
+        "migration_shapes": migration_rows,
     }
     if args.smoke:
         print(json.dumps(doc, indent=2))

@@ -194,6 +194,48 @@ for i, r in enumerate(reqs):
 print(f"chaos smoke OK ({s.n_preempted} preemptions, parity held)")
 EOF
 
+echo "== live stepped migration smoke (slice schedule + parity) =="
+python - <<'EOF'
+# Skewed router traffic trips the Eq. 2 trigger; the resulting migration
+# must spread its weight copy over >= 3 decode ticks, commit only after the
+# last slice, and leave the generated tokens bit-identical to both the
+# instantaneous baseline (migration_slices=0) and the dense reference.
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config, smoke
+from repro.models import transformer as T
+from repro.parallel.ctx import ParallelCtx
+from repro.runtime.serve import Server, ServeConfig
+
+cfg = dataclasses.replace(
+    smoke(get_config("dbrx-132b")), n_experts=4, experts_per_token=2)
+params = T.init_params(jax.random.PRNGKey(0), cfg)
+router = np.asarray(params["layers"]["moe"]["router"])
+scale = np.ones(router.shape[-1], router.dtype)
+scale[[0, 1]] = 8.0  # sustained hot experts
+params["layers"]["moe"]["router"] = jnp.asarray(router * scale)
+
+def serve(**kw):
+    srv = Server(cfg, ParallelCtx(capacity_factor=8.0),
+                 jax.tree.map(jnp.copy, params),
+                 ServeConfig(max_seq=32, batch=2, **kw))
+    out = srv.generate(jnp.ones((2, 6), jnp.int32), 12)
+    return srv, np.asarray(out)
+
+vep = dict(slots_per_device=3, virtual_ep=4, alpha=0.1)
+_, dense = serve()
+inst_srv, inst = serve(migration_slices=0, **vep)
+step_srv, stepped = serve(migration_slices=4, **vep)
+assert inst_srv.migrations > 0 and step_srv.migrations > 0
+np.testing.assert_array_equal(dense, inst)
+np.testing.assert_array_equal(dense, stepped)
+for rec in step_srv.driver.history:
+    assert len(set(rec["issue_ticks"])) >= 3, rec
+    assert rec["committed"] > max(rec["issue_ticks"]), rec
+print(f"migration smoke OK ({step_srv.migrations} stepped migrations, "
+      "parity held)")
+EOF
+
 echo "== kernel-dispatch bench smoke (interpret mode) =="
 python benchmarks/bench_kernels.py --smoke > /dev/null
 echo "bench smoke OK"

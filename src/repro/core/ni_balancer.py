@@ -27,18 +27,29 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.parallel.placement import PlacementError, PlacementTable
+
 Migration = tuple[int, int, int]  # (expert, src_device, dst_device)
 
 
 @dataclasses.dataclass
 class BalancerState:
-    """Expert placement for one MoE layer."""
+    """Expert placement for one MoE layer.
+
+    Since the placement-table unification the state no longer owns its own
+    ``replicas`` device lists: it reads (and mutates) placement exclusively
+    through the shared :class:`~repro.parallel.placement.PlacementTable` —
+    the same table whose committed half routes tokens in the jitted decode
+    step. ``replicas`` is a derived *planning* view (committed + in-flight
+    replicas), so Algorithm 1 never re-plans a migration whose slices are
+    still landing. The load EMA, dead set and straggler slowdowns remain
+    balancer-local (they are heat inputs, not placement).
+    """
 
     n_experts: int
     n_devices: int
     slots_per_device: int                      # native + shadow capacity
-    # replicas[e] = list of devices hosting expert e (first = native home).
-    replicas: list[list[int]]
+    table: PlacementTable
     load_ema: np.ndarray                       # Load_e, EMA of token counts
     ema_decay: float = 0.8
     dead: set[int] = dataclasses.field(default_factory=set)
@@ -52,16 +63,24 @@ class BalancerState:
     ) -> "BalancerState":
         if n_experts > n_devices * slots_per_device:
             raise ValueError("not enough slots for native experts")
-        replicas = [[e % n_devices] for e in range(n_experts)]
+        table = PlacementTable.round_robin(
+            n_experts, n_devices, slots_per_device
+        )
         return cls(
             n_experts=n_experts,
             n_devices=n_devices,
             slots_per_device=slots_per_device,
-            replicas=replicas,
+            table=table,
             load_ema=np.ones(n_experts) / n_experts,
         )
 
     # -- derived quantities ---------------------------------------------------
+
+    @property
+    def replicas(self) -> list[list[int]]:
+        """replicas[e] = devices hosting expert e (first = native home),
+        including in-flight (reserved, not yet routed-to) replicas."""
+        return self.table.all_replica_devices()
 
     def num_replicas(self) -> np.ndarray:
         return np.array([len(r) for r in self.replicas])
@@ -74,11 +93,7 @@ class BalancerState:
         return out
 
     def slots_used(self) -> np.ndarray:
-        used = np.zeros(self.n_devices, dtype=np.int64)
-        for devs in self.replicas:
-            for d in devs:
-                used[d] += 1
-        return used
+        return self.table.slots_used().astype(np.int64)
 
     def heats(self) -> np.ndarray:
         """Heat_d = Σ_e on d Load_e / Num_e, with straggler penalty."""
@@ -121,19 +136,25 @@ class BalancerState:
         survives, so routing never targets it again. Experts whose *only*
         copy sits on ``device`` keep that entry (every expert must retain
         >= 1 replica; run ``evacuate`` first so no such orphan exists).
-        Returns the number of dropped replicas."""
-        n = 0
-        for e in range(self.n_experts):
-            if device in self.replicas[e] and len(self.replicas[e]) > 1:
-                self.replicas[e] = [d for d in self.replicas[e] if d != device]
-                n += 1
-        return n
+        Returns the number of experts that dropped a replica."""
+        return self.table.drop_device(device)
 
     def apply(self, mig: Migration) -> None:
+        """Instantaneously commit a planned migration into the shared
+        table (simulation / evacuation fast-forward; the live serving path
+        goes through the MigrationDriver's reserve -> slices -> commit)."""
         e, src, dst = mig
-        assert src in self.replicas[e]
-        assert dst not in self.replicas[e]
-        self.replicas[e].append(dst)
+        if src not in self.replicas[e]:
+            raise PlacementError(
+                f"migration {mig}: source device {src} hosts no replica "
+                f"of expert {e}"
+            )
+        if self.table.apply(e, dst) is None:
+            raise PlacementError(
+                f"migration {mig}: destination {dst} cannot take a replica "
+                f"of expert {e} (no free slot, already hosting, or replica "
+                f"cap)"
+            )
 
 
 # ---------------------------------------------------------------------------
@@ -196,7 +217,14 @@ def topology_aware_balance(
 
     while max_migrations is None or len(migs) < max_migrations:
         heat = heats()
-        hottest = int(np.argmax(heat))
+        # Dead devices carry infinite heat so *candidate* filtering shuns
+        # them, but they must not win the hottest-device argmax: their
+        # replicas are already dropped from routing, so planning against
+        # them wedges the balancer forever after any death.
+        finite = np.where(np.isfinite(heat), heat, -np.inf)
+        hottest = int(np.argmax(finite))
+        if not np.isfinite(heat[hottest]):
+            break
         on_hot = [e for e in range(state.n_experts) if hottest in replicas[e]]
         if not on_hot:
             break
@@ -251,7 +279,10 @@ def greedy_balance(
 
     while max_migrations is None or len(migs) < max_migrations:
         heat = heats()
-        hottest = int(np.argmax(heat))
+        finite = np.where(np.isfinite(heat), heat, -np.inf)
+        hottest = int(np.argmax(finite))   # dead (inf) devices can't win
+        if not np.isfinite(heat[hottest]):
+            break
         on_hot = [e for e in range(state.n_experts) if hottest in replicas[e]]
         if not on_hot:
             break
@@ -287,12 +318,13 @@ def prune_replicas(state: BalancerState, frac: float = 0.5) -> int:
     finite = heats[np.isfinite(heats)]
     mean_heat = finite.mean() if len(finite) else 0.0
     n = 0
+    table = state.table
     for e in range(state.n_experts):
         while (
-            len(state.replicas[e]) > 1
-            and state.load_ema[e] / len(state.replicas[e]) < frac * mean_heat
+            int(table.n_replicas[e]) > 1
+            and state.load_ema[e] / int(table.n_replicas[e]) < frac * mean_heat
         ):
-            state.replicas[e].pop()
+            table.remove_replica(e, int(table.n_replicas[e]) - 1)
             n += 1
     return n
 

@@ -244,7 +244,15 @@ def _flash_decode_eligible(q, k_cache, ctx: ParallelCtx) -> bool:
         # ``seq_parallel_decode_attend`` (kernel partials + LSE-merge psum
         # when eligible) — see ``_seq_parallel_decode_eligible``.
         return False
-    return nh % ctx.n_model == 0 and nkv % ctx.n_model == 0 and b % ctx.n_batch == 0
+    # Same eligibility shape as ``_flash_attend_eligible``: kv heads either
+    # divide the model axis (head-sharded cache) or the axis divides into
+    # the GQA groups (tp % nkv == 0 — kv cache replicated, each rank slices
+    # its group's single kv head), so dense decode under wide TP no longer
+    # requires nkv % tp == 0.
+    tp = ctx.n_model
+    if nh % tp or b % ctx.n_batch:
+        return False
+    return nkv % tp == 0 or tp % nkv == 0
 
 
 def _flash_decode(q, k_cache, v_cache, valid, ctx: ParallelCtx):
@@ -254,15 +262,40 @@ def _flash_decode(q, k_cache, v_cache, valid, ctx: ParallelCtx):
         o = registry.decode_attend(q1, k_cache, v_cache, valid)
         return o[:, None]
     bspec, ax = ctx.batch_spec, ctx.model_axis
+    tp = ctx.n_model
+    nkv = k_cache.shape[2]
+    if nkv % tp == 0:
+        o = shard_map(
+            lambda qb, kb, vb, mb: registry.decode_attend(qb, kb, vb, mb),
+            mesh=ctx.mesh,
+            in_specs=(
+                P(bspec, ax, None),
+                P(bspec, None, ax, None),
+                P(bspec, None, ax, None),
+                P(bspec, None),
+            ),
+            out_specs=P(bspec, ax, None),
+            check_vma=False,
+        )(q1, k_cache, v_cache, valid)
+        return o[:, None]
+
+    # kv-head-replicated variant (tp % nkv == 0): mirrors ``_flash_attend``'s
+    # kv-rep body — q heads shard the model axis (dim 1 of (B, H, hd)), the
+    # kv cache stays replicated (``cache_specs`` already degraded the
+    # non-dividing head axis to replication) and each rank slices out the
+    # one kv head its contiguous query-head block attends to.
+    def kv_rep_body(qb, kb, vb, mb):
+        r = jax.lax.axis_index(ax)
+        i = r // (tp // nkv)
+        kb = jax.lax.dynamic_slice_in_dim(kb, i, 1, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(vb, i, 1, axis=2)
+        return registry.decode_attend(qb, kb, vb, mb)
+
+    kv_spec = P(bspec, None, None, None)
     o = shard_map(
-        lambda qb, kb, vb, mb: registry.decode_attend(qb, kb, vb, mb),
+        kv_rep_body,
         mesh=ctx.mesh,
-        in_specs=(
-            P(bspec, ax, None),
-            P(bspec, None, ax, None),
-            P(bspec, None, ax, None),
-            P(bspec, None),
-        ),
+        in_specs=(P(bspec, ax, None), kv_spec, kv_spec, P(bspec, None)),
         out_specs=P(bspec, ax, None),
         check_vma=False,
     )(q1, k_cache, v_cache, valid)

@@ -36,6 +36,7 @@ from repro.parallel.collectives import (
     uniform_placement,
 )
 from repro.parallel.ctx import ParallelCtx
+from repro.parallel.placement import PlacementTable
 
 
 def moe_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
@@ -217,7 +218,7 @@ def moe_ep(
     x: jax.Array,
     cfg: ModelConfig,
     ctx: ParallelCtx,
-    placement: tuple[jax.Array, jax.Array] | None = None,
+    placement: PlacementTable | tuple[jax.Array, jax.Array] | None = None,
     slot_weights: dict | None = None,
     slots_per_device: int | None = None,
     token_mask=None,
@@ -225,9 +226,11 @@ def moe_ep(
     """Expert-parallel dispatch over the model axis (or, with no mesh, the
     local single-process equivalent — see ``ep_moe_local``).
 
-    ``placement`` is (slot_of, n_replicas); default = native homes. For
-    serving with shadow slots the Server owns ``slot_weights`` (n_slots
-    rows, possibly > n_experts) and updates replica rows out-of-band; the
+    ``placement`` is a :class:`PlacementTable` (the serving substrate; its
+    committed :meth:`~PlacementTable.device_view` is what routes) or a bare
+    ``(slot_of, n_replicas)`` pair; default = native homes. For serving
+    with shadow slots the Server owns ``slot_weights`` (n_slots rows,
+    possibly > n_experts) and updates replica rows out-of-band; the
     default materializes slots from the logical experts (slot i = expert
     i % E)."""
     ep = ctx.n_model
@@ -257,6 +260,8 @@ def moe_ep(
             }
             tiled = True
     n_slots = ep * slots_per_device
+    if isinstance(placement, PlacementTable):
+        placement = placement.device_view()   # committed routing view only
     if placement is None:
         if tiled:
             # The tile above put weight row ``s % n_rows`` on slot ``s`` —

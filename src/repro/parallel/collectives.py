@@ -23,6 +23,8 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels import registry
 from repro.parallel.compat import shard_map
 from repro.parallel.ctx import ParallelCtx
+from repro.parallel.placement import PlacementTable
+from repro.parallel.sharding import placement_specs
 
 
 def bucket_capacity(n_tok: int, k: int, capacity_factor: float, n_buckets: int) -> int:
@@ -205,16 +207,12 @@ def choose_slots(
 
 
 def uniform_placement(n_experts: int, n_slots: int, r_max: int = 4):
-    """Initial placement: expert e -> slot e (native homes), one replica."""
-    import numpy as np
+    """Initial placement: expert e -> slot e (native homes), one replica.
 
-    slot_of = np.zeros((n_experts, r_max), dtype=np.int32)
-    slot_of[:, 0] = np.arange(n_experts) % n_slots
-    # Unused replica columns point at the native slot (harmless).
-    for r in range(1, r_max):
-        slot_of[:, r] = slot_of[:, 0]
-    n_replicas = np.ones(n_experts, dtype=np.int32)
-    return jnp.asarray(slot_of), jnp.asarray(n_replicas)
+    Thin wrapper over :meth:`PlacementTable.uniform` kept for callers that
+    want the bare ``(slot_of, n_replicas)`` device arrays without holding a
+    table; the serving path holds the table itself."""
+    return PlacementTable.uniform(n_experts, n_slots, r_max=r_max).device_view()
 
 
 def tiled_placement(n_experts: int, n_rows: int, n_slots: int, r_max: int = 4):
@@ -229,21 +227,11 @@ def tiled_placement(n_experts: int, n_rows: int, n_slots: int, r_max: int = 4):
     tokens provably land on slots holding their expert's weights, and the
     wrap-around shadow slots carry real traffic instead of sitting idle
     while still being counted in the capacity denominator.
-    """
-    import numpy as np
 
-    assert n_experts <= n_rows <= n_slots, (n_experts, n_rows, n_slots)
-    # Every wrap-around replica must fit the table, or truncated experts
-    # would leave live tiled slots idle (the bug this placement fixes).
-    r_max = max(r_max, -(-n_slots // n_rows))
-    slot_of = np.zeros((n_experts, r_max), dtype=np.int32)
-    n_replicas = np.zeros(n_experts, dtype=np.int32)
-    for e in range(n_experts):
-        reps = list(range(e, n_slots, n_rows))
-        n_replicas[e] = len(reps)
-        for r in range(r_max):
-            slot_of[e, r] = reps[min(r, len(reps) - 1)]
-    return jnp.asarray(slot_of), jnp.asarray(n_replicas)
+    Thin wrapper over :meth:`PlacementTable.tiled` (which grows ``r_max`` so
+    every wrap-around replica fits the table)."""
+    table = PlacementTable.tiled(n_experts, n_rows, n_slots, r_max=r_max)
+    return table.device_view()
 
 
 # ---------------------------------------------------------------------------
@@ -478,8 +466,7 @@ def ep_moe_shardmap(
             P(axis, None, None),           # slot weights: slot dim over model
             P(axis, None, None),
             P(axis, None, None),
-            P(None, None),                 # routing tables replicated
-            P(None),
+            *placement_specs(),            # routing tables replicated
         ),
         out_specs=P(bspec, seq_spec, None),
         check_vma=False,

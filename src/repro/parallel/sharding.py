@@ -34,6 +34,17 @@ def _path_str(path) -> str:
     return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
 
 
+def placement_specs() -> tuple[P, P]:
+    """PartitionSpecs for the routing tables ``(slot_of, n_replicas)`` that
+    ``PlacementTable.device_view`` feeds into the EP dispatch: replicated on
+    every shard. Replication is what makes the placement-table commit an
+    *atomic* swap — all ranks route by the same committed arrays within one
+    step, and a commit between steps replaces the pair everywhere at once
+    (the tables are tiny; the expensive state, the slot weights, never moves
+    at swap time — it moved slice-by-slice beforehand)."""
+    return P(None, None), P(None)
+
+
 def param_spec(path: str, shape: tuple[int, ...], cfg: ModelConfig, n_model: int) -> P:
     """PartitionSpec for one parameter leaf (leading stacked-layer dims are
     never sharded)."""

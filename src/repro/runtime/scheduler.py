@@ -311,6 +311,16 @@ class RequestScheduler:
             victim = min(live, key=lambda r: (r.n_decoded, -r.rid))
             self._preempt(victim, "pool-exhausted")
 
+    def _drain_migrations(self) -> None:
+        """Keep in-flight stepped expert migrations landing on idle ticks.
+        When requests are live the decode step itself drives the
+        MigrationDriver (one slice per decode tick, overlapped with the
+        step's compute); on an idle tick there is no decode to ride, so
+        the scheduler advances the slices here — a dead batch must not
+        freeze a half-copied replica in limbo."""
+        if not self._live():
+            self.server.drain_migrations()
+
     # -- the tick ------------------------------------------------------------
 
     def step(self) -> list[Request]:
@@ -318,6 +328,7 @@ class RequestScheduler:
         self._apply_faults()
         self._admit_ready()
         self._ensure_headroom()
+        self._drain_migrations()
         finished: list[Request] = []
         if self._live():
             logits, self.cache = self.server.decode(

@@ -5,25 +5,33 @@ The ``Server`` owns
 * jitted prefill/decode closures (cache donated, placement traced),
 * physical expert *slot* weights — ``(L, n_slots, d, f)`` rows, i.e. native
   experts + shadow-slot replicas, slot dim sharded over the model axis,
+* the shared :class:`repro.parallel.placement.PlacementTable` — the single
+  placement substrate read by the balancer (planning view) and the jitted
+  decode step (committed routing view),
 * a :class:`repro.core.ni_balancer.BalancerState` fed by the per-step
   expert counts the model emits,
+* a :class:`repro.runtime.migration_driver.MigrationDriver` executing
+  balancer plans as live stepped migrations,
 * the ER-Mapping-derived hop distance used by Algorithm 1.
 
-Every decode step: route -> dispatch -> observe counts -> (Eq. 2 trigger)
--> plan with Algorithm 1 -> apply placement (slot table update + expert
-weight row copy = the migration's data movement; its *schedule* across cold
-links is validated in the analytical evaluator — see docs/serving.md).
+Every decode step: drain migrations (commit fully-copied replicas at the
+step boundary — the atomic routing-table swap — then issue this tick's
+weight-row slice copies, overlapped with the step's compute) -> route ->
+dispatch -> observe counts -> (Eq. 2 trigger) -> plan with Algorithm 1 ->
+submit the plan to the driver. ``ServeConfig(migration_slices=0)`` keeps
+the old instantaneous path (synchronous whole-expert copy) as the parity
+baseline.
 
-Device failures: ``mark_dead`` evacuates orphaned experts (balancer state
-*and* physical weight rows) and drops the dead device's replicas from the
-routing table. Stragglers: per-device step-time EMAs scale heats, draining
-load away.
+Device failures: ``mark_dead`` aborts/fast-forwards in-flight migration
+slices, evacuates orphaned experts (placement table *and* physical weight
+rows) and drops the dead device's replicas from the routing table.
+Stragglers: per-device step-time EMAs scale heats, draining load away.
 
 Request-level serving (admission, preemption, retirement) lives one layer
 up in :mod:`repro.runtime.scheduler`; this module provides the slot-level
 substrate it drives (``empty_cache`` / ``prefill_into_slot`` / ``release``
-/ ``next_write_unbacked``). The full lifecycle is documented in
-docs/serving.md.
+/ ``next_write_unbacked`` / ``drain_migrations``). The full lifecycle is
+documented in docs/serving.md.
 """
 
 from __future__ import annotations
@@ -44,8 +52,9 @@ from repro.core.ni_balancer import (
 )
 from repro.models import attention as A
 from repro.models import transformer as T
-from repro.parallel.collectives import uniform_placement
 from repro.parallel.ctx import ParallelCtx
+from repro.parallel.placement import PlacementTable
+from repro.runtime.migration_driver import MOE_WEIGHTS, MigrationDriver
 
 
 @dataclasses.dataclass
@@ -56,6 +65,13 @@ class ServeConfig:
     alpha: float = 0.5             # Eq. 2 imbalance threshold
     beta: float = 0.0              # Eq. 2 refractory (0 = non-invasive)
     ema: float = 0.8
+    # Live stepped migration: each balancer-planned migration copies its
+    # expert's weight rows over this many decode ticks (one slice per tick,
+    # floored by the migration's Local/Global hop count), and the routing
+    # table swaps atomically only after the last slice lands. 0 = the
+    # instantaneous baseline: synchronous whole-expert copy on the decode
+    # path (the paper's invasive strawman; kept for parity testing).
+    migration_slices: int = 4
     # Paged KV cache: requests share a physical page pool through per-
     # request block tables (attention.paged_cache_init); `pool_pages`
     # oversubscribes the pool vs the dense `batch * ceil(max_seq / page)`
@@ -150,25 +166,33 @@ class Server:
             # Expand per-layer expert rows to physical slots (slot s holds
             # expert s % E initially).
             rows = np.arange(n_slots) % cfg.n_experts
-            for w in ("w_gate", "w_up", "w_down"):
+            for w in MOE_WEIGHTS:
                 arr = self.params["layers"]["moe"][w]
                 self.params["layers"]["moe"][w] = jnp.take(arr, rows, axis=1)
-            self.slot_of, self.n_replicas = uniform_placement(
-                cfg.n_experts, n_slots
-            )
-            # Expert e natively lives in slot e, i.e. on device e // spd —
-            # the balancer state must mirror the physical slot layout.
+            # The one placement substrate: expert e natively lives in slot
+            # e, i.e. on device e // spd. The balancer plans against it
+            # (committed + in-flight view) and the jitted decode routes by
+            # its committed device_view — no mirrored tables to diverge.
+            self.table = PlacementTable.uniform(cfg.n_experts, n_slots, spd)
             self.state = BalancerState(
                 n_experts=cfg.n_experts,
                 n_devices=self.ep,
                 slots_per_device=spd,
-                replicas=[[e // spd] for e in range(cfg.n_experts)],
+                table=self.table,
                 load_ema=np.ones(cfg.n_experts) / cfg.n_experts,
                 ema_decay=serve_cfg.ema,
             )
+            self.driver = (
+                MigrationDriver(
+                    self.table, min_slices=serve_cfg.migration_slices
+                )
+                if serve_cfg.migration_slices > 0
+                else None
+            )
         else:
-            self.slot_of = self.n_replicas = None
+            self.table = None
             self.state = None
+            self.driver = None
 
         prefill_kw: dict = {}
         if serve_cfg.paged:
@@ -221,6 +245,22 @@ class Server:
             ),
             donate_argnums=(0, 1),
         )
+
+    # -- placement views -----------------------------------------------------
+
+    @property
+    def slot_of(self):
+        """Committed routing table (device mirror) — reads through the
+        shared PlacementTable; kept as a property for callers that predate
+        the unification."""
+        return None if self.table is None else self.table.device_view()[0]
+
+    @property
+    def n_replicas(self):
+        return None if self.table is None else self.table.device_view()[1]
+
+    def _moe(self) -> dict:
+        return self.params["layers"]["moe"]
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -462,9 +502,13 @@ class Server:
                 f"decode past max_seq={self.scfg.max_seq} (cache full, "
                 f"pos={pos}): release the request or raise max_seq"
             )
-        placement = (
-            (self.slot_of, self.n_replicas) if self.use_balancer else None
-        )
+        if self.use_balancer:
+            # Step boundary: commit migrations whose last slice landed (the
+            # atomic routing-table swap), then issue this tick's weight
+            # slices — dispatched before the step so the copy overlaps the
+            # decode compute below.
+            self.drain_migrations()
+        placement = self.table.device_view() if self.use_balancer else None
         slot_mask = None
         if self.scfg.paged and self._released:
             # Continuous batching: released/empty rows still step (fixed
@@ -522,106 +566,151 @@ class Server:
         if not plan:
             return
         self.last_mig = self.t
-        self.migrations += sum(self._apply_migration(mig) for mig in plan)
+        if self.driver is None:
+            # Instantaneous baseline: synchronous whole-expert copies.
+            self.migrations += sum(self._apply_migration(mig) for mig in plan)
+        else:
+            # Stepped path: reserve destination slots now; slices are
+            # issued one per decode tick by drain_migrations, and
+            # self.migrations counts commits (the atomic table swaps).
+            self.driver.submit(plan, self._moe(), self.t)
 
-    def _free_slot(self, device: int) -> int | None:
-        spd = self.scfg.slots_per_device
-        used = set()
-        slot_of = np.asarray(self.slot_of)
-        n_rep = np.asarray(self.n_replicas)
-        for e in range(self.cfg.n_experts):
-            for r in range(n_rep[e]):
-                used.add(int(slot_of[e, r]))
-        for s in range(device * spd, (device + 1) * spd):
-            if s not in used:
-                return s
-        return None
+    def drain_migrations(self) -> int:
+        """Advance in-flight stepped migrations by one tick: commit the
+        fully-copied ones (routing-table swap at a step boundary), then
+        issue one weight-row slice for the rest. ``decode`` calls this at
+        the top of every step; the scheduler calls it on idle ticks so
+        migrations keep landing while no request is decodable. Returns the
+        number of migrations committed this tick."""
+        if self.driver is None:
+            return 0
+        committed = self.driver.tick(self._moe(), self.t)
+        self.migrations += len(committed)
+        return len(committed)
 
-    def _apply_migration(self, mig, update_state: bool = True) -> bool:
-        """Replicate expert ``e`` onto a free slot of device ``dst``.
-        Returns True iff the migration was physically applied; a no-op
-        (no free slot, or the expert is at its replica cap) leaves the
-        balancer state untouched too — applying the state half alone would
-        let the two placements diverge (the old behaviour at the cap
-        overwrote ``slot_of[e, -1]`` without retiring the old replica's
-        slot, leaking it from ``_free_slot``'s accounting forever)."""
+    def _copy_expert_rows(self, src_slot: int, dst_slot: int) -> None:
+        """Whole-expert row copy (the instantaneous/fast-forward path; the
+        stepped hot path copies per-tick slices in the driver instead)."""
+        moe = self._moe()
+        for w in MOE_WEIGHTS:
+            moe[w] = moe[w].at[:, dst_slot].set(moe[w][:, src_slot])
+
+    def _apply_migration(self, mig) -> bool:
+        """Replicate expert ``e`` onto a free slot of device ``dst``,
+        instantaneously. Returns True iff the migration was physically
+        applied; a no-op (no free slot, or the expert is at its replica
+        cap) leaves the table untouched — the reserve/commit pair cannot
+        apply the routing half without the data movement or vice versa
+        (the old split-table behaviour at the cap overwrote
+        ``slot_of[e, -1]`` and leaked the previous replica's slot from the
+        free-slot accounting forever)."""
         e, _src, dst = mig
-        slot = self._free_slot(dst)
+        slot = self.table.try_reserve(e, dst)
         if slot is None:
             return False
-        r = int(np.asarray(self.n_replicas)[e])
-        if r >= self.slot_of.shape[1]:
-            return False           # replica cap: adding would leak a slot
         # Data movement: copy the expert's weight rows into the shadow slot
         # (a device-to-device transfer under the slot sharding).
-        src_slot = int(np.asarray(self.slot_of)[e, 0])
-        moe = self.params["layers"]["moe"]
-        for w in ("w_gate", "w_up", "w_down"):
-            moe[w] = moe[w].at[:, slot].set(moe[w][:, src_slot])
-        self.slot_of = self.slot_of.at[e, r].set(slot)
-        self.n_replicas = self.n_replicas.at[e].set(r + 1)
-        if update_state:
-            self.state.apply(mig)
+        self._copy_expert_rows(int(self.table.slot_of[e, 0]), slot)
+        self.table.commit(e, slot)
         return True
-
-    def _mirror_migration(self, mig) -> bool:
-        """Physical half only — for plans already applied to the balancer
-        state (e.g. evacuation)."""
-        return self._apply_migration(mig, update_state=False)
 
     # -- fault tolerance ------------------------------------------------------
 
-    def _drop_device_slots(self, device: int) -> None:
-        """Remove the dead device's slots from the routing table wherever
-        the expert has another replica (swap-with-last compaction; unused
-        tail columns point at a live replica, the table's convention)."""
-        spd = self.scfg.slots_per_device
-        slot_of = np.asarray(self.slot_of).copy()
-        n_rep = np.asarray(self.n_replicas).copy()
-        for e in range(self.cfg.n_experts):
-            i = 0
-            while i < n_rep[e]:
-                if slot_of[e, i] // spd == device and n_rep[e] > 1:
-                    n_rep[e] -= 1
-                    slot_of[e, i] = slot_of[e, n_rep[e]]
-                else:
-                    i += 1
-            slot_of[e, n_rep[e]:] = slot_of[e, 0]
-        self.slot_of = jnp.asarray(slot_of)
-        self.n_replicas = jnp.asarray(n_rep)
+    def _retarget(self, dead: int, mig):
+        """Replacement for a migration aborted by ``dead``'s death: same
+        expert, re-sourced from a live committed replica, aimed at the
+        nearest live device with a free slot that doesn't already host (or
+        expect) the expert. None when no such device exists."""
+        e, _src, _dst = mig
+        src = next(
+            (
+                d
+                for d in self.table.replica_devices(e, include_pending=False)
+                if d != dead and d not in self.state.dead
+            ),
+            None,
+        )
+        if src is None:
+            return None            # evacuation will recreate the expert
+        cand = [
+            d
+            for d in range(self.ep)
+            if d != dead
+            and d not in self.state.dead
+            and d not in self.table.replica_devices(e)
+            and self.table.free_slot(d) is not None
+        ]
+        if not cand:
+            return None
+        return (e, src, min(cand, key=lambda d: self.distance(src, d)))
 
     def mark_dead(self, device: int) -> list:
         """Node failure — the full evacuation path:
 
-        1. ``evacuate`` pins the device's heat to infinity and plans (and
-           applies, state-side) a replica for every expert whose only live
-           copy sat on the dead device;
-        2. each plan entry is mirrored into physical weight movement
-           (``_mirror_migration``: slot-table update + expert row copy).
-           The rows are read from the dead device's slot — valid in this
-           logical simulation, where "death" means the scheduler stops
-           routing to the device but its HBM is still addressable; a real
-           wafer die failure would restore the rows from checkpoint shards
-           instead;
-        3. the dead device's replicas drop out of the routing table (server
-           *and* balancer state), so no token copy is dispatched to it
-           again.
+        1. in-flight stepped migrations touching the device are resolved
+           first: slices headed *to* it abort (reservation released, then
+           requeued toward a live destination from slice zero), slices
+           sourced *from* it fast-forward to completion — either way no
+           torn replica is ever committed;
+        2. ``evacuate`` pins the device's heat to infinity and commits
+           (table-side) a replica for every expert whose only live copy
+           sat on the dead device;
+        3. each evacuation entry's weight rows are copied whole
+           (fast-forward — availability beats overlap here). The rows are
+           read from the dead device's slot — valid in this logical
+           simulation, where "death" means the scheduler stops routing to
+           the device but its HBM is still addressable; a real wafer die
+           failure would restore the rows from checkpoint shards instead;
+        4. the dead device's replicas drop out of the shared table's
+           routing view, so no token copy is dispatched to it again.
 
         Returns the evacuation plan (list of ``(expert, src, dst)``).
         """
         if self.state is None:
             return []
+        if self.driver is not None:
+            self.driver.handle_device_death(
+                device,
+                self._moe(),
+                self.t,
+                retarget=functools.partial(self._retarget, device),
+            )
         plan = evacuate(self.state, device, self.distance)
-        for mig in plan:
-            self._mirror_migration(mig)
-        self._drop_device_slots(device)
-        self.state.drop_device(device)
+        for e, _src, dst in plan:
+            # Orphan source: usually the dying device's slot; under repeated
+            # failures the sole copy may sit on an earlier-dead device, so
+            # fall back to the native column (0 — commit appends after it).
+            src_slot = self.table.slot_on_device(e, device)
+            if src_slot is None:
+                src_slot = int(self.table.slot_of[e, 0])
+            dst_slot = self.table.slot_on_device(e, dst)
+            self._copy_expert_rows(src_slot, dst_slot)
+        self.table.drop_device(device)
         return plan
 
     def report_step_time(self, device: int, ratio: float):
-        """Straggler mitigation: fold measured step-time ratio into heats."""
+        """Straggler mitigation: fold measured step-time ratio into heats.
+
+        Validates its inputs the way ``validate_ep_token_split`` does —
+        the old silent acceptance let an out-of-range device id grow the
+        slowdown array past the EP axis and a negative ratio drive a
+        device's heat below zero, both corrupting Algorithm 1's ordering
+        long after the bad report."""
         if self.state is None:
             return
+        device = int(device)
+        if not 0 <= device < self.ep:
+            raise ValueError(
+                f"report_step_time: device {device} is outside the EP axis "
+                f"(want 0 <= device < {self.ep})"
+            )
+        ratio = float(ratio)
+        if not np.isfinite(ratio) or ratio <= 0:
+            raise ValueError(
+                f"report_step_time: ratio {ratio} must be a finite positive "
+                f"step-time ratio (measured / median); a non-positive EMA "
+                f"would corrupt the balancer's heat ordering"
+            )
         if self.state.slowdown is None:
             self.state.slowdown = np.ones(self.ep)
         self.state.slowdown[device] = (

@@ -263,6 +263,52 @@ def test_gqa_kv_replicated_flash_attention_8dev():
     assert "KVREP_OK" in out
 
 
+def test_gqa_kv_replicated_flash_decode_8dev():
+    """Dense-cache flash decode under wide TP with non-dividing kv heads
+    (nkv=2 < tp=4, tp % nkv == 0): must take the kv-head-replicated
+    shard_map variant (prefill already had one) and match the einsum
+    fallback across a multi-step decode. nkv=3 stays ineligible."""
+    out = _run(
+        """
+        import jax, jax.numpy as jnp, dataclasses
+        from repro.configs import get_config, smoke
+        from repro.models import attention as A
+        from repro.parallel.ctx import ParallelCtx
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
+        cfg = dataclasses.replace(smoke(get_config("llama3.2-1b")),
+                                  n_heads=8, n_kv_heads=2)
+        ctx_on = ParallelCtx(mesh=mesh, use_kernels=True, seq_parallel_kv=False)
+        ctx_off = ParallelCtx(mesh=mesh, use_kernels=False, seq_parallel_kv=False)
+        p = A.attn_init(jax.random.PRNGKey(0), cfg)
+        b, max_seq = 4, 32
+        q = jnp.zeros((b, 1, 8, cfg.head_dim_))
+        kc = jnp.zeros((b, max_seq, 2, cfg.head_dim_))
+        assert A._flash_decode_eligible(q, kc, ctx_on), "kv-rep decode not eligible"
+        cache_on = A.cache_init(cfg, b, max_seq)
+        cache_off = A.cache_init(cfg, b, max_seq)
+        x0 = jax.random.normal(jax.random.PRNGKey(1), (b, 1, cfg.d_model)) * 0.3
+        pos = jnp.asarray(0, jnp.int32)
+        with mesh:
+            for step in range(6):
+                x = x0 * (step % 3 + 1) / 3
+                o_on, cache_on = jax.jit(lambda p,x,c,t: A.decode_attention(
+                    p, x, c, t, cfg, ctx_on))(p, x, cache_on, pos)
+                o_off, cache_off = jax.jit(lambda p,x,c,t: A.decode_attention(
+                    p, x, c, t, cfg, ctx_off))(p, x, cache_off, pos)
+                err = float(jnp.max(jnp.abs(o_on - o_off)))
+                assert err < 2e-5, ("kv-rep decode parity", step, err)
+                pos = pos + 1
+        # tp not a multiple of nkv: ineligible, fallback unchanged
+        q3 = jnp.zeros((b, 1, 12, cfg.head_dim_))
+        k3 = jnp.zeros((b, max_seq, 3, cfg.head_dim_))
+        assert not A._flash_decode_eligible(q3, k3, ctx_on)
+        print("KVREP_DECODE_OK")
+        """
+    )
+    assert "KVREP_DECODE_OK" in out
+
+
 def test_ep_gradient_parity_8dev():
     """EP dispatch must be differentiable and match dense gradients — on
     both the padded fallback (kernels off) and the fused compact path

@@ -236,6 +236,67 @@ print(f"migration smoke OK ({step_srv.migrations} stepped migrations, "
       "parity held)")
 EOF
 
+echo "== crash-and-restore smoke (snapshot at step k, bit-identical resume) =="
+python - <<'EOF'
+# Kill the serving loop after step k via a crash_restart fault, rebuild a
+# *fresh* Server + scheduler from the on-disk snapshot plus the params
+# checkpoint, and require the concatenated pre/post-crash token streams to
+# equal the uninterrupted run's, for every request (including one still
+# QUEUED at the crash).
+import dataclasses, os, tempfile
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config, smoke
+from repro.models import transformer as T
+from repro.parallel.ctx import ParallelCtx
+from repro.runtime import snapshot as S
+from repro.runtime.faults import CRASH_RESTART, Fault, FaultPlan, SimulatedCrash
+from repro.runtime.scheduler import FINISHED, RequestScheduler
+from repro.runtime.serve import Server, ServeConfig
+
+cfg = dataclasses.replace(
+    smoke(get_config("dbrx-132b")), n_experts=4, experts_per_token=2)
+params = T.init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(3)
+prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+           for n in (5, 9, 4, 7)]
+arrivals = [0, 1, 2, 6]   # the last request is still QUEUED at the crash
+scfg = dict(max_seq=64, paged=True, page_size=8, pool_pages=10, alpha=0.1,
+            slots_per_device=3, virtual_ep=4, batch=2)
+
+def sched_for(faults=None):
+    srv = Server(cfg, ParallelCtx(capacity_factor=8.0),
+                 jax.tree.map(jnp.copy, params), ServeConfig(**scfg))
+    s = RequestScheduler(srv, faults=faults)
+    for p, a in zip(prompts, arrivals):
+        s.submit(p, max_new_tokens=6, arrival=a)
+    return s
+
+ref = sched_for().run()
+
+k = 4
+path = os.path.join(tempfile.mkdtemp(), "snap.npz")
+plan = FaultPlan([Fault(step=k, kind=CRASH_RESTART, path=path)])
+s = sched_for(faults=plan)
+try:
+    s.run()
+    raise SystemExit("crash fault never fired")
+except SimulatedCrash as e:
+    assert e.step == k and os.path.exists(path)
+pre = {r.rid: list(r.tokens_out) for r in s.requests}
+
+restored = S.restore_scheduler(
+    path, cfg, ParallelCtx(capacity_factor=8.0),
+    jax.tree.map(jnp.copy, params), faults=plan)
+res = restored.run()
+for rid, want in ref.items():
+    got = np.asarray(res[rid])
+    assert np.array_equal(got[:len(pre[rid])], pre[rid]), (rid, "prefix torn")
+    assert np.array_equal(got, want), (rid, got, want)
+assert all(r.state == FINISHED for r in restored.requests)
+print(f"crash-restore smoke OK (killed at step {k}, "
+      f"{len(prompts)} streams bit-identical)")
+EOF
+
 echo "== kernel-dispatch bench smoke (interpret mode) =="
 python benchmarks/bench_kernels.py --smoke > /dev/null
 echo "bench smoke OK"

@@ -131,6 +131,15 @@ class BalancerState:
     def mark_dead(self, device: int) -> None:
         self.dead.add(device)
 
+    def revive(self, device: int) -> None:
+        """Re-admit a previously dead device into planning: clear its dead
+        flag (heat becomes finite again) and reset any straggler penalty.
+        Placement is untouched — the device re-enters routing only when
+        replica copies commit through the migration path."""
+        self.dead.discard(device)
+        if self.slowdown is not None:
+            self.slowdown[device] = 1.0
+
     def drop_device(self, device: int) -> int:
         """Forget a dead device's replicas wherever another replica
         survives, so routing never targets it again. Experts whose *only*
@@ -357,6 +366,72 @@ def evacuate(
         state.apply(mig)
         used[dst] += 1
         migs.append(mig)
+    return migs
+
+
+def revival_plan(
+    state: BalancerState,
+    device: int,
+    distance: Callable[[int, int], float],
+    max_seed: int | None = None,
+) -> list[Migration]:
+    """Seed a just-revived (blank-HBM) device with expert replicas.
+
+    The availability inverse of :func:`evacuate`: greedily give ``device``
+    a replica of the expert with the highest per-replica load, sourced
+    from its topologically nearest live host, as long as the move still
+    reduces the global peak heat. ``state.revive(device)`` must already
+    have run; the returned plan is fed to the stepped migration driver, so
+    nothing routes to ``device`` until each copy's last slice commits.
+    """
+    if device in state.dead:
+        raise PlacementError(f"device {device} is still marked dead")
+    migs: list[Migration] = []
+    replicas = [list(r) for r in state.replicas]
+    used = state.slots_used().copy()
+    load = state.load_ema
+
+    def heats() -> np.ndarray:
+        h = np.zeros(state.n_devices)
+        for e, devs in enumerate(replicas):
+            share = load[e] / len(devs)
+            for d in devs:
+                h[d] += share
+        if state.slowdown is not None:
+            h = h * state.slowdown
+        for d in state.dead:
+            h[d] = np.inf
+        return h
+
+    while used[device] < state.slots_per_device:
+        if max_seed is not None and len(migs) >= max_seed:
+            break
+        heat = heats()
+        finite = np.where(np.isfinite(heat), heat, -np.inf)
+        peak = float(np.max(finite))
+        # Candidate experts: not already on the device, below replica cap,
+        # and splitting their load onto one more replica must not push the
+        # revived device past the current peak (else the move cannot help).
+        cands = [
+            e
+            for e in range(state.n_experts)
+            if device not in replicas[e]
+            and len(replicas[e]) < state.table.r_max
+            and any(d not in state.dead for d in replicas[e])
+        ]
+        cands = [
+            e
+            for e in cands
+            if heat[device] + load[e] / (len(replicas[e]) + 1) < peak
+        ]
+        if not cands:
+            break
+        e = max(cands, key=lambda e: load[e] / len(replicas[e]))
+        live = [d for d in replicas[e] if d not in state.dead]
+        src = min(live, key=lambda d: distance(d, device))
+        replicas[e].append(device)
+        used[device] += 1
+        migs.append((e, src, device))
     return migs
 
 

@@ -168,6 +168,24 @@ class PlacementTable:
     def device_of(self, slot: int) -> int:
         return int(slot) // self.slots_per_device
 
+    def owner_of_slots(self) -> np.ndarray:
+        """Expert committed to each physical slot, ``-1`` for free slots —
+        the mapping a restore needs to re-place expert weight rows from a
+        logical-expert checkpoint into slot-expanded buffers."""
+        owner = np.full(self.n_slots, -1, dtype=np.int64)
+        live = np.arange(self.r_max)[None, :] < self.n_replicas[:, None]
+        experts = np.broadcast_to(
+            np.arange(self.n_experts)[:, None], self.slot_of.shape
+        )
+        owner[self.slot_of[live]] = experts[live]
+        return owner
+
+    def committed_devices(self) -> set[int]:
+        """Devices referenced by any committed replica — the set a token
+        can physically route to this tick."""
+        live = np.arange(self.r_max)[None, :] < self.n_replicas[:, None]
+        return {int(d) for d in (self.slot_of[live] // self.slots_per_device)}
+
     def committed_slots(self, e: int) -> list[int]:
         return [int(s) for s in self.slot_of[e, : self.n_replicas[e]]]
 

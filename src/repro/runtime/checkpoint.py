@@ -2,7 +2,10 @@
 
 * Pytrees flatten to path-keyed numpy arrays inside a single ``.npz``;
   writes go to a temp file + ``os.replace`` (atomic on POSIX), so a crash
-  mid-save never corrupts the latest checkpoint.
+  mid-save never corrupts the latest checkpoint. A checkpoint counts as
+  *complete* only once its ``.meta`` sidecar landed too: ``steps()``
+  skips meta-less torn writes, so ``restore()`` falls back to the newest
+  complete step after a crash in the npz→meta window.
 * ``CheckpointManager`` keeps the newest ``keep`` steps and can resume the
   data-pipeline cursor.
 * **Elastic restore**: arrays come back as host numpy and are re-placed
@@ -10,7 +13,13 @@
   different device count / mesh shape (node failure, pool resize) is the
   same code path as same-shape restore.
 * ``async_save`` runs serialization off the training thread (device->host
-  copy happens eagerly; file IO overlaps the next step).
+  copy happens eagerly; file IO and retention GC overlap the next step;
+  a failed background write re-raises from the next ``wait()``).
+
+Used on both sides of the repo: the training loop checkpoints params +
+optimizer + data cursor (``runtime/elastic.py``), and the serving tier
+persists crash snapshots of its host-side scheduler/placement truth
+through the same atomic writer (``runtime/snapshot.py``).
 """
 
 from __future__ import annotations
@@ -81,16 +90,25 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._exc: BaseException | None = None
 
     def _path(self, step: int) -> str:
         return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
 
-    def steps(self) -> list[int]:
+    def steps(self, complete_only: bool = True) -> list[int]:
         out = []
         for f in os.listdir(self.dir):
             m = re.fullmatch(r"ckpt_(\d+)\.npz", f)
-            if m:
-                out.append(int(m.group(1)))
+            if not m:
+                continue
+            s = int(m.group(1))
+            # A crash between the npz replace and the meta replace leaves a
+            # torn checkpoint that load_meta would explode on; a complete
+            # checkpoint has both halves. restore()'s latest() fallback
+            # therefore lands on the newest *complete* step.
+            if complete_only and not os.path.exists(self._path(s) + ".meta"):
+                continue
+            out.append(s)
         return sorted(out)
 
     def latest(self) -> int | None:
@@ -102,18 +120,31 @@ class CheckpointManager:
         self._gc()
 
     def async_save(self, step: int, tree, extra: dict | None = None):
-        """Snapshot to host now, write in the background."""
+        """Snapshot to host now; write *and garbage-collect* in the
+        background (the old thread target was bare ``save``, so ``keep``
+        was never enforced for async-only users). A failed background
+        write is re-raised from the next ``wait()`` / ``async_save()``
+        instead of dying silently on the worker thread."""
         host = jax.tree.map(np.asarray, tree)  # device->host before returning
         self.wait()
-        self._thread = threading.Thread(
-            target=save, args=(self._path(step), host, step, extra)
-        )
+
+        def _job():
+            try:
+                save(self._path(step), host, step, extra)
+                self._gc()
+            except BaseException as e:  # re-raised from wait()
+                self._exc = e
+
+        self._thread = threading.Thread(target=_job)
         self._thread.start()
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
 
     def restore(self, template, step: int | None = None, shardings=None):
         step = step if step is not None else self.latest()
@@ -123,9 +154,22 @@ class CheckpointManager:
         return tree, load_meta(self._path(step))
 
     def _gc(self):
-        for s in self.steps()[: -self.keep]:
+        complete = self.steps()
+        for s in complete[: -self.keep]:
             for suffix in ("", ".meta"):
                 try:
                     os.remove(self._path(s) + suffix)
+                except FileNotFoundError:
+                    pass
+        if not complete:
+            return
+        # Torn writes (npz without meta) strictly older than the newest
+        # complete step are crash debris — reclaim them. A *newer* meta-less
+        # npz is spared: it may be an in-progress write whose meta is about
+        # to land.
+        for s in self.steps(complete_only=False):
+            if s < complete[-1] and not os.path.exists(self._path(s) + ".meta"):
+                try:
+                    os.remove(self._path(s))
                 except FileNotFoundError:
                     pass

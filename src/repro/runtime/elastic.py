@@ -68,9 +68,31 @@ class StepTimer:
         return float(self.last / self.ema)
 
 
-def drill_failure(server, device: int, steps_to_recover: int = 5) -> dict:
-    """Fault-injection drill: kill a device, run the balancer, report how
-    quickly peak heat recovers. Used by tests and the ops runbook."""
+def _drain_all(server, limit: int = 256) -> int:
+    """Tick the stepped migration driver on idle time until nothing is in
+    flight — a drill has no decode loop for the slices to ride, so this
+    plays the scheduler's idle-tick role. Advances ``server.t`` (commits
+    need a tick boundary after the last slice). Returns ticks consumed."""
+    if server.driver is None:
+        return 0
+    ticks = 0
+    while server.driver.pending and ticks < limit:
+        server.drain_migrations()
+        server.t += 1
+        ticks += 1
+    # one final boundary: commit anything whose last slice just issued
+    server.drain_migrations()
+    return ticks
+
+
+def drill_failure(server, device: int, revive: bool = False) -> dict:
+    """Fault-injection drill: kill a device, rebalance, optionally revive
+    it — through the *public* serving path (``Server.mark_dead`` /
+    ``apply_plan`` / ``revive``), so the drill exercises exactly the
+    stepped-migration machinery production uses (the old version reached
+    into the private instantaneous ``_apply_migration``). Reports peak-heat
+    recovery and, with ``revive=True``, revival recovery time in ticks.
+    Used by tests and the ops runbook."""
     state = server.state
     if state is None:
         return {"supported": False}
@@ -79,10 +101,12 @@ def drill_failure(server, device: int, steps_to_recover: int = 5) -> dict:
 
     # Availability first: Server.mark_dead runs the whole evacuation path
     # (state + physical weight rows + routing-table drop). Then rebalance
-    # the surviving devices for load.
+    # the surviving devices for load, driving the plan through the same
+    # migration path (stepped driver or instantaneous) serving uses.
     plan = server.mark_dead(device)
     migs = topology_aware_balance(state, server.distance)
-    applied = sum(server._apply_migration(m) for m in migs)
+    applied = server.apply_plan(migs)
+    _drain_all(server)
     heats = state.heats()
     after = float(np.max(heats[np.isfinite(heats)]))
     # The availability invariant: every expert keeps at least one replica
@@ -91,10 +115,25 @@ def drill_failure(server, device: int, steps_to_recover: int = 5) -> dict:
         any(d not in state.dead for d in state.replicas[e])
         for e in range(state.n_experts)
     )
-    return {
+    out = {
         "supported": True,
         "migrations": len(plan) + applied,
         "peak_before": before,
         "peak_after": after,
         "evacuated": evacuated,
     }
+    if revive:
+        rplan = server.revive(device)
+        ticks = _drain_all(server)
+        heats = state.heats()
+        out["revival_migrations"] = len(rplan)
+        # Ticks from revival until every seeded replica committed — the
+        # window in which the device is back up but carries no traffic.
+        out["revival_recovery_ticks"] = ticks
+        out["revival_replicas"] = sum(
+            device in devs for devs in state.replicas
+        )
+        out["peak_after_revival"] = float(
+            np.max(heats[np.isfinite(heats)])
+        )
+    return out

@@ -22,10 +22,19 @@ Fault kinds
   for one step (a numerics-blowup stand-in); the scheduler detects the
   non-finite row and requeues the request for recompute instead of
   emitting garbage tokens.
+* ``device_revival`` — ``Server.revive(device)``: re-admits a repaired
+  device with blank HBM; replica copies stream back through the stepped
+  migration driver and routing only references the device once they
+  commit.
+* ``crash_restart`` — simulated host crash: the scheduler snapshots its
+  state (end of the previous tick) and raises :class:`SimulatedCrash`
+  before doing any work this tick; the harness rebuilds a fresh
+  scheduler from the snapshot and the run resumes bit-identically.
 
 ``FaultPlan.chaos`` builds a seeded random plan with the shape the chaos
 parity test (and the CI smoke) uses: one device death, a straggler report,
-a pool-pressure window, and a NaN step.
+a pool-pressure window, and a NaN step — plus, with ``revive=True``, a
+revival of the killed device a few steps after its death.
 """
 
 from __future__ import annotations
@@ -39,8 +48,33 @@ STRAGGLER = "straggler"
 POOL_PRESSURE = "pool_pressure"
 POOL_RELEASE = "pool_release"
 NAN_LOGITS = "nan_logits"
+DEVICE_REVIVAL = "device_revival"
+CRASH_RESTART = "crash_restart"
 
-KINDS = (DEVICE_DEATH, STRAGGLER, POOL_PRESSURE, POOL_RELEASE, NAN_LOGITS)
+KINDS = (
+    DEVICE_DEATH,
+    STRAGGLER,
+    POOL_PRESSURE,
+    POOL_RELEASE,
+    NAN_LOGITS,
+    DEVICE_REVIVAL,
+    CRASH_RESTART,
+)
+
+
+class SimulatedCrash(Exception):
+    """Raised by the scheduler when a ``crash_restart`` fault fires.
+
+    Carries everything the harness needs to play the crash for real:
+    the snapshot of end-of-previous-tick state (also written to ``path``
+    when one was given), from which a fresh process rebuilds the server
+    and scheduler and resumes."""
+
+    def __init__(self, step: int, snapshot, path: str = ""):
+        super().__init__(f"simulated crash at scheduler step {step}")
+        self.step = step
+        self.snapshot = snapshot
+        self.path = path
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,10 +83,11 @@ class Fault:
 
     step: int
     kind: str
-    device: int = 0          # device_death / straggler
+    device: int = 0          # device_death / straggler / device_revival
     ratio: float = 1.0       # straggler step-time ratio
     pages: int = 0           # pool_pressure / pool_release page count
     slots: tuple[int, ...] = ()  # nan_logits targets; () = every live slot
+    path: str = ""           # crash_restart snapshot destination ("" = memory)
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -90,23 +125,27 @@ class FaultPlan:
         pressure_pages: int = 0,
         nan_slots: tuple[int, ...] = (),
         straggler_ratio: float = 3.0,
+        revive: bool = False,
     ) -> "FaultPlan":
         """Seeded random chaos: one device death (when ``n_devices`` > 1 —
         device 0 is spared so native experts keep a live anchor in tiny
         topologies), one straggler report, one pool-pressure window of
         ``pressure_pages`` pages, and one NaN-logits step on ``nan_slots``.
-        Deterministic in ``seed``."""
+        With ``revive=True``, the killed device comes back (blank HBM) a
+        few steps after its death. Deterministic in ``seed``; the revival
+        draw happens after all others, so ``revive=False`` plans are
+        byte-identical to pre-revival versions of this helper."""
         rng = np.random.default_rng(seed)
         span = max(n_steps, 8)
         faults = []
+        death = None
         if n_devices > 1:
-            faults.append(
-                Fault(
-                    step=int(rng.integers(1, span)),
-                    kind=DEVICE_DEATH,
-                    device=int(rng.integers(1, n_devices)),
-                )
+            death = Fault(
+                step=int(rng.integers(1, span)),
+                kind=DEVICE_DEATH,
+                device=int(rng.integers(1, n_devices)),
             )
+            faults.append(death)
             faults.append(
                 Fault(
                     step=int(rng.integers(1, span)),
@@ -130,6 +169,14 @@ class FaultPlan:
                     step=int(rng.integers(1, span)),
                     kind=NAN_LOGITS,
                     slots=tuple(nan_slots),
+                )
+            )
+        if revive and death is not None:
+            faults.append(
+                Fault(
+                    step=death.step + int(rng.integers(2, max(3, span // 2))),
+                    kind=DEVICE_REVIVAL,
+                    device=death.device,
                 )
             )
         return cls(faults)

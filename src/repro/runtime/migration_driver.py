@@ -255,3 +255,19 @@ class MigrationDriver:
     @property
     def pending(self) -> int:
         return len(self.in_flight)
+
+    def export_in_flight(self) -> list[dict]:
+        """JSON-able ledger of in-flight migrations, for crash snapshots.
+        Only the plan entry and its progress are exported: a restore
+        re-submits from slice zero (partially copied slices died with the
+        crashed process's HBM), so slot ids and hop schedules are
+        recomputed against the restored table."""
+        return [
+            {
+                "mig": list(fl.mig),
+                "next_slice": fl.next_slice,
+                "n_slices": fl.n_slices,
+                "submitted": fl.submitted,
+            }
+            for fl in self.in_flight
+        ]

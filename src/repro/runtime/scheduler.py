@@ -104,6 +104,12 @@ class SchedulerConfig:
     prompt_bucket_floor: int = 8
     # run() safety valve.
     max_steps: int = 10_000
+    # Crash safety: every `snapshot_every` ticks, snapshot the scheduler's
+    # end-of-previous-tick state (kept on `last_snapshot`; also written
+    # atomically to `snapshot_path` when set). 0 disables the cadence —
+    # `crash_restart` faults still snapshot at the crash tick.
+    snapshot_every: int = 0
+    snapshot_path: str = ""
 
 
 class RequestScheduler:
@@ -131,6 +137,7 @@ class RequestScheduler:
         self._rid = 0
         self._hostage: list[int] = []        # pages stolen by pool_pressure
         self._poison: set[int] | None = None  # nan_logits slots this tick
+        self.last_snapshot = None            # most recent ServerSnapshot
 
     # -- submission ----------------------------------------------------------
 
@@ -262,10 +269,17 @@ class RequestScheduler:
         pool = self.server.page_pool
         for f in self.faults.at(self.step_no):
             self.events.append((self.step_no, "fault", (f.kind, f)))
+            if f.kind == F.CRASH_RESTART:
+                continue   # handled at the top of step(), pre-snapshot
             if f.kind == F.DEVICE_DEATH:
                 plan = self.server.mark_dead(f.device)
                 self.events.append(
                     (self.step_no, "evacuated", (f.device, len(plan)))
+                )
+            elif f.kind == F.DEVICE_REVIVAL:
+                plan = self.server.revive(f.device)
+                self.events.append(
+                    (self.step_no, "revived", (f.device, len(plan)))
                 )
             elif f.kind == F.STRAGGLER:
                 self.server.report_step_time(f.device, f.ratio)
@@ -323,8 +337,43 @@ class RequestScheduler:
 
     # -- the tick ------------------------------------------------------------
 
+    def save_snapshot(self, path: str | None = None):
+        """Capture end-of-previous-tick state as a ServerSnapshot (kept on
+        ``last_snapshot``); with ``path``, also persist it via the atomic
+        checkpoint writer. Lazy import: snapshot.py layers on top of the
+        scheduler, not under it."""
+        from repro.runtime import snapshot as S
+
+        snap = S.snapshot_scheduler(self)
+        if path:
+            S.save_snapshot(path, snap)
+        self.last_snapshot = snap
+        return snap
+
     def step(self) -> list[Request]:
-        """One scheduler tick. Returns the requests that finished."""
+        """One scheduler tick. Returns the requests that finished.
+
+        Snapshot/crash handling comes first — before faults, admission or
+        decode — so a snapshot always captures a clean tick boundary (the
+        end of the previous tick) and the faults of the crash tick re-fire
+        exactly once after a restore."""
+        if (
+            self.cfg.snapshot_every
+            and self.step_no
+            and self.step_no % self.cfg.snapshot_every == 0
+        ):
+            self.save_snapshot(self.cfg.snapshot_path or None)
+        crash = next(
+            (
+                f
+                for f in self.faults.at(self.step_no)
+                if f.kind == F.CRASH_RESTART
+            ),
+            None,
+        )
+        if crash is not None:
+            snap = self.save_snapshot(crash.path or None)
+            raise F.SimulatedCrash(self.step_no, snap, crash.path)
         self._apply_faults()
         self._admit_ready()
         self._ensure_headroom()

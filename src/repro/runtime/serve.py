@@ -47,6 +47,7 @@ from repro.configs.base import ModelConfig
 from repro.core.ni_balancer import (
     BalancerState,
     evacuate,
+    revival_plan,
     should_trigger,
     topology_aware_balance,
 )
@@ -86,6 +87,14 @@ class ServeConfig:
     # only the inter-device hop is notional (collectives.ep_moe_local).
     # Ignored under a real multi-device mesh (the model axis wins).
     virtual_ep: int | None = None
+
+
+# A revived device's HBM is blank (no on-wafer disk); its free slot rows are
+# scrubbed with this loud finite sentinel until migration slices overwrite
+# them. Finite so inert paths stay exactly zero (an empty expert bucket
+# computes FFN(0 @ W) = 0 regardless of W), loud so any routing leak to an
+# uncommitted replica explodes the logits instead of silently decoding.
+BLANK_WEIGHT = 1e30
 
 
 class SlotReleaseError(RuntimeError):
@@ -139,6 +148,7 @@ class Server:
         params,
         serve_cfg: ServeConfig = ServeConfig(),
         distance=None,
+        table: PlacementTable | None = None,
     ):
         self.cfg = cfg
         self.ctx = ctx
@@ -163,9 +173,29 @@ class Server:
             n_slots = self.ep * spd
             if n_slots < cfg.n_experts:
                 raise ValueError("not enough slots for native experts")
-            # Expand per-layer expert rows to physical slots (slot s holds
-            # expert s % E initially).
-            rows = np.arange(n_slots) % cfg.n_experts
+            # Expand per-layer expert rows to physical slots. Fresh start:
+            # slot s holds expert s % E. Snapshot restore: a saved table
+            # dictates the owner of every committed slot, so the restored
+            # weights land exactly where the crashed process routed them;
+            # free slots fall back to s % E (never routed to).
+            if table is not None:
+                if (
+                    table.n_experts != cfg.n_experts
+                    or table.n_slots != n_slots
+                    or table.slots_per_device != spd
+                ):
+                    raise ValueError(
+                        f"restored table shape ({table.n_experts} experts, "
+                        f"{table.n_slots} slots, {table.slots_per_device} "
+                        f"per device) does not match serve config "
+                        f"({cfg.n_experts}, {n_slots}, {spd})"
+                    )
+                owner = table.owner_of_slots()
+                rows = np.where(
+                    owner >= 0, owner, np.arange(n_slots) % cfg.n_experts
+                )
+            else:
+                rows = np.arange(n_slots) % cfg.n_experts
             for w in MOE_WEIGHTS:
                 arr = self.params["layers"]["moe"][w]
                 self.params["layers"]["moe"][w] = jnp.take(arr, rows, axis=1)
@@ -173,7 +203,9 @@ class Server:
             # e, i.e. on device e // spd. The balancer plans against it
             # (committed + in-flight view) and the jitted decode routes by
             # its committed device_view — no mirrored tables to diverge.
-            self.table = PlacementTable.uniform(cfg.n_experts, n_slots, spd)
+            self.table = table or PlacementTable.uniform(
+                cfg.n_experts, n_slots, spd
+            )
             self.state = BalancerState(
                 n_experts=cfg.n_experts,
                 n_devices=self.ep,
@@ -566,14 +598,26 @@ class Server:
         if not plan:
             return
         self.last_mig = self.t
+        self.apply_plan(plan)
+
+    def apply_plan(self, plan) -> int:
+        """Execute a balancer plan ``[(expert, src, dst), ...]`` through
+        the configured migration path — the one public entry point for
+        placement changes (balancing, ops drills, revival seeding).
+
+        With a driver (``migration_slices > 0``): reserve destination
+        slots now; slices are issued one per decode tick by
+        ``drain_migrations`` and ``self.migrations`` counts commits (the
+        atomic table swaps). Returns the number of migrations accepted.
+        Without a driver: synchronous whole-expert copies, applied (and
+        counted) immediately."""
+        if not plan:
+            return 0
         if self.driver is None:
-            # Instantaneous baseline: synchronous whole-expert copies.
-            self.migrations += sum(self._apply_migration(mig) for mig in plan)
-        else:
-            # Stepped path: reserve destination slots now; slices are
-            # issued one per decode tick by drain_migrations, and
-            # self.migrations counts commits (the atomic table swaps).
-            self.driver.submit(plan, self._moe(), self.t)
+            applied = sum(self._apply_migration(mig) for mig in plan)
+            self.migrations += applied
+            return applied
+        return len(self.driver.submit(plan, self._moe(), self.t))
 
     def drain_migrations(self) -> int:
         """Advance in-flight stepped migrations by one tick: commit the
@@ -687,6 +731,101 @@ class Server:
             self._copy_expert_rows(src_slot, dst_slot)
         self.table.drop_device(device)
         return plan
+
+    def revive(self, device: int) -> list:
+        """Device revival — re-admit a repaired device with *blank* HBM
+        (wafer-scale chips have no on-wafer disk; everything it held died
+        with it):
+
+        1. the balancer forgets the death (finite heat, straggler penalty
+           reset) so planning may target the device again;
+        2. the device's free slot rows are scrubbed with ``BLANK_WEIGHT``
+           — any premature route to an uncommitted replica now explodes
+           instead of silently decoding stale weights. Slots still
+           committed there (sole-copy orphans left by a failed evacuation)
+           are spared: they are all the routing view has for that expert;
+        3. :func:`~repro.core.ni_balancer.revival_plan` seeds the blank
+           slots with the hottest per-replica experts from their nearest
+           live hosts, and the plan goes through ``apply_plan`` — i.e. the
+           stepped MigrationDriver when configured, so copies overlap
+           decode ticks and routing only references the device once each
+           replica's last slice commits. A second death mid-revival rides
+           the driver's existing abort/fast-forward handling.
+
+        After the seeded replicas commit, ``_maybe_balance`` sees the
+        device's (low) heat and rebalances onto it naturally. Returns the
+        revival plan."""
+        if self.state is None:
+            raise ValueError("revive requires the balancer serving path")
+        device = int(device)
+        if not 0 <= device < self.ep:
+            raise ValueError(
+                f"revive: device {device} is outside the EP axis "
+                f"(want 0 <= device < {self.ep})"
+            )
+        if device not in self.state.dead:
+            raise ValueError(f"revive: device {device} is not dead")
+        self.state.revive(device)
+        spd = self.table.slots_per_device
+        used = self.table.used_slots()
+        blank = [
+            s
+            for s in range(device * spd, (device + 1) * spd)
+            if not used[s]
+        ]
+        if blank:
+            moe = self._moe()
+            idx = jnp.asarray(blank)
+            for w in MOE_WEIGHTS:
+                moe[w] = moe[w].at[:, idx].set(BLANK_WEIGHT)
+        plan = revival_plan(self.state, device, self.distance)
+        self.apply_plan(plan)
+        return plan
+
+    # -- crash-safe snapshot/restore ------------------------------------------
+
+    @classmethod
+    def restore_snapshot(
+        cls, snap, cfg: ModelConfig, ctx: ParallelCtx, params, distance=None
+    ):
+        """Rebuild a live ``Server`` on a fresh process from a
+        :class:`~repro.runtime.snapshot.ServerSnapshot` plus the params
+        checkpoint (``params`` holds *logical* expert rows, exactly as a
+        fresh ``__init__`` expects — the snapshot deliberately excludes
+        weights). Expert rows are re-placed per the saved committed table,
+        balancer truth (load EMA, dead set, slowdowns) is restored, and the
+        pending-migration ledger is re-submitted from slice zero — partial
+        slices died with the old process's HBM, and re-copying is
+        idempotent because nothing routes to a reservation until commit."""
+        scfg = ServeConfig(**snap.serve_cfg)
+        table = None
+        if snap.table is not None:
+            table = PlacementTable(
+                n_experts=cfg.n_experts,
+                n_slots=int(snap.table["n_slots"]),
+                slots_per_device=int(snap.table["slots_per_device"]),
+                slot_of=snap.table["slot_of"],
+                n_replicas=snap.table["n_replicas"],
+            )
+        srv = cls(cfg, ctx, params, scfg, distance=distance, table=table)
+        srv.t = int(snap.t)
+        srv.last_mig = int(snap.last_mig)
+        srv.migrations = int(snap.migrations)
+        if srv.state is not None:
+            srv.state.load_ema = np.asarray(snap.load_ema, float).copy()
+            srv.state.dead = set(int(d) for d in snap.dead)
+            srv.state.slowdown = (
+                None
+                if snap.slowdown is None
+                else np.asarray(snap.slowdown, float).copy()
+            )
+            if srv.driver is not None and snap.pending_migrations:
+                srv.driver.submit(
+                    [tuple(m["mig"]) for m in snap.pending_migrations],
+                    srv._moe(),
+                    srv.t,
+                )
+        return srv
 
     def report_step_time(self, device: int, ratio: float):
         """Straggler mitigation: fold measured step-time ratio into heats.

@@ -119,6 +119,64 @@ def test_async_checkpoint(tmp_path):
     assert mgr.latest() == 5
 
 
+def test_async_checkpoint_enforces_retention(tmp_path):
+    """The background writer must run the same retention gc the sync path
+    does (the old thread target was bare `save` — `keep` was a no-op for
+    async-only users and the directory grew without bound)."""
+    cfg = smoke(get_config("tinyllama-1.1b"))
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.async_save(s, state)
+    mgr.wait()
+    assert mgr.steps() == [3, 4]
+
+
+def test_async_checkpoint_reraises_write_failure(tmp_path, monkeypatch):
+    """A failed background write surfaces at the next wait() instead of
+    dying silently on the worker thread."""
+    cfg = smoke(get_config("tinyllama-1.1b"))
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    mgr = CheckpointManager(str(tmp_path))
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr("repro.runtime.checkpoint.save", boom)
+    mgr.async_save(1, state)
+    with pytest.raises(OSError, match="disk full"):
+        mgr.wait()
+    # the exception is consumed: the manager is reusable afterwards
+    monkeypatch.undo()
+    mgr.async_save(2, state)
+    mgr.wait()
+    assert mgr.latest() == 2
+
+
+def test_torn_checkpoint_skipped_and_gced(tmp_path):
+    """A crash between the .npz replace and the .meta replace leaves a
+    meta-less checkpoint: steps()/latest() must skip it (so restore falls
+    back to the newest complete one) and a later gc reclaims the orphan."""
+    cfg = smoke(get_config("tinyllama-1.1b"))
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, state, extra={"data_step": 1})
+    mgr.save(2, state, extra={"data_step": 2})
+    # injected partial write: step 2's npz landed, its meta did not
+    os.remove(os.path.join(str(tmp_path), "ckpt_00000002.npz.meta"))
+    assert mgr.steps() == [1]
+    assert mgr.latest() == 1
+    _, meta = mgr.restore(state)
+    assert meta["step"] == 1
+    # torn npz is still on disk (never silently deleted before a newer
+    # complete step exists beyond it) ...
+    assert mgr.steps(complete_only=False) == [1, 2]
+    # ... and the next successful save's gc reclaims it
+    mgr.save(3, state)
+    assert mgr.steps(complete_only=False) == [1, 3]
+    assert mgr.steps() == [1, 3]
+
+
 def test_data_determinism_and_host_sharding():
     a = SyntheticLM(DataConfig(1000, 8, 32, seed=1)).batch_at(7)
     b = SyntheticLM(DataConfig(1000, 8, 32, seed=1)).batch_at(7)

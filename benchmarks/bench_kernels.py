@@ -59,10 +59,10 @@ Usage::
     PYTHONPATH=src python benchmarks/bench_kernels.py --check BENCH_kernels.json
 
 ``--smoke`` runs one tiny FFN cell + one tiny decode cell + one tiny
-stepped-migration cell with 2 iterations (interpret mode on CPU) and exits
-non-zero on any parity failure — a kernel-dispatch, paged-decode or
-sliced-copy regression fails the gate even when the full parity suite
-isn't run.
+stepped-migration cell + one tiny chunked-admission cell with 2 iterations
+(interpret mode on CPU) and exits non-zero on any parity failure — a
+kernel-dispatch, paged-decode, sliced-copy or prefill-lane regression
+fails the gate even when the full parity suite isn't run.
 
 ``--check BASELINE.json`` recomputes every **deterministic** column (shape
 metadata, FLOP accounting, per-leg HBM-byte accounting — not wall-clock,
@@ -148,6 +148,21 @@ MIGRATION_SHAPES = [
     ("mig_finegrain_8x128", 4, 8, 128, 256, 8, 128),
 ]
 MIGRATION_SMOKE_SHAPES = [("mig_smoke", 2, 4, 16, 32, 4, 16)]
+
+# Chunked-admission interleave cells: (name, model, B, chunk, prompt_len,
+# page_size, max_seq). One cell = the fused two-lane decode step
+# (runtime/serve.py with ServeConfig(prefill_chunk=C)) admitting a
+# prompt_len prompt one C-token chunk per tick while a B-slot decode batch
+# rides the same program. The deterministic columns — `ttft_ticks` (chunk
+# ticks to the first token) and `chunk_hbm_mb` (KV bytes the prefill lane
+# moves over the whole admission) — are CI-gated; the wall columns,
+# including chunk_exposed_ms = wall(decode + live chunk) − wall(decode +
+# no-op chunk), are not.
+PREFILL_SHAPES = [
+    ("prefill_interleave_c8", "llama3.2-1b", 3, 8, 40, 8, 64),
+    ("prefill_interleave_c16", "llama3.2-1b", 3, 16, 48, 8, 64),
+]
+PREFILL_SMOKE_SHAPES = [("prefill_smoke", "llama3.2-1b", 2, 8, 16, 8, 32)]
 
 
 def _skewed_counts(g: int, c: int, seed: int) -> np.ndarray:
@@ -303,6 +318,43 @@ def migration_cell_accounting(name, layers, s, d, f, n_slices, n_tok):
         # one commit tick after the last slice tick (the atomic table swap
         # happens at the next step boundary).
         "ticks_to_commit": n_slices + 1,
+    }
+
+
+def prefill_cell_accounting(name, model, b, chunk, prompt_len, bs, max_seq):
+    """Deterministic columns of one chunked-admission cell: the tick and
+    KV-byte schedule the decode step's prefill lane pays to admit one
+    prompt. Gated by ``--check``; the wall columns are not."""
+    from repro.configs import get_config, smoke
+
+    cfg = smoke(get_config(model))
+    kv_row_bytes = 2 * cfg.n_kv_heads * cfg.head_dim_ * np.dtype(np.float32).itemsize
+    ticks = -(-prompt_len // chunk)
+    # Every tick writes the full padded chunk (padding rows land on the
+    # write-off page — still a write) and the lane's attention gathers the
+    # request's whole capacity table (max_seq rows of k + v), per layer.
+    rows_written = ticks * chunk
+    rows_streamed = ticks * max_seq
+    return {
+        "shape": name,
+        "model": model,
+        "B": b,
+        "chunk": chunk,
+        "prompt_len": prompt_len,
+        "page_size": bs,
+        "max_seq": max_seq,
+        "L": cfg.n_layers,
+        "kv_heads": cfg.n_kv_heads,
+        "head_dim": cfg.head_dim_,
+        # first token lands on the final chunk's tick; live decode slots
+        # never stall (they share the one fused program).
+        "ttft_ticks": ticks,
+        "decode_stall_ticks": 0,
+        "chunk_rows_written": rows_written,
+        "chunk_rows_streamed": rows_streamed,
+        "chunk_hbm_mb": round(
+            cfg.n_layers * (rows_written + rows_streamed) * kv_row_bytes / 1e6, 4
+        ),
     }
 
 
@@ -553,6 +605,78 @@ def run_migration(iters: int = 20, smoke: bool = False) -> list[dict]:
     return rows
 
 
+def run_prefill(iters: int = 20, smoke_mode: bool = False) -> list[dict]:
+    """Chunked-admission interleave cells: the fused two-lane decode step
+    with a live prefill chunk vs the no-op chunk.
+
+    Parity first: the decode lane's logits must be bitwise identical
+    whether the prefill lane is off (``chunk=None``), idling (the no-op
+    chunk) or mid-chunk — the lane must be invisible to its batchmates.
+    ``chunk_exposed_ms`` = wall(decode + live chunk) − wall(decode + no-op
+    chunk): the per-tick cost of interleaving admission, which on TPU the
+    step's existing compute largely hides."""
+    from repro.configs import get_config, smoke
+    from repro.models import transformer as T
+    from repro.parallel.ctx import ParallelCtx
+
+    ctx = ParallelCtx()
+    rows = []
+    for name, model, b, chunk, prompt_len, bs, max_seq in (
+        PREFILL_SMOKE_SHAPES if smoke_mode else PREFILL_SHAPES
+    ):
+        meta = prefill_cell_accounting(name, model, b, chunk, prompt_len, bs, max_seq)
+        cfg = smoke(get_config(model))
+        params = T.init_params(jax.random.PRNGKey(zlib.crc32(name.encode())), cfg)
+        cache = T.init_cache(cfg, b, max_seq, paged=True, page_size=bs)
+        nb = -(-max_seq // bs)
+        token = jnp.zeros((b, 1), jnp.int32)
+        rng = np.random.default_rng(zlib.crc32(name.encode()))
+        buf = np.zeros(chunk, np.int32)
+        buf[:] = rng.integers(0, cfg.vocab_size, size=chunk)
+        live_chunk = {
+            "tokens": jnp.asarray(buf[None, :]),
+            "table": jnp.arange(nb, dtype=jnp.int32),
+            "start": jnp.zeros((), jnp.int32),
+            "length": jnp.asarray(chunk, jnp.int32),
+        }
+        trash = cache["layers"]["pool_k"].shape[1] - 1
+        noop_chunk = {
+            "tokens": jnp.zeros((1, chunk), jnp.int32),
+            "table": jnp.full((nb,), trash, jnp.int32),
+            "start": jnp.zeros((), jnp.int32),
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+        @jax.jit
+        def lane_off(token, cache):
+            return T.decode_step(params, token, cache, cfg, ctx)[0]
+
+        @jax.jit
+        def fused(token, cache, chunk_op):
+            return T.decode_step(
+                params, token, cache, cfg, ctx, chunk=chunk_op
+            )[0]
+
+        ref = np.asarray(lane_off(token, cache))
+        for label, op in (("noop", noop_chunk), ("live", live_chunk)):
+            np.testing.assert_array_equal(
+                np.asarray(fused(token, cache, op)), ref,
+                err_msg=f"{name}: chunk lane ({label}) leaked into decode lane",
+            )
+
+        decode_ms = _time(fused, token, cache, noop_chunk, iters=iters) * 1e3
+        both_ms = _time(fused, token, cache, live_chunk, iters=iters) * 1e3
+        rows.append(
+            {
+                **meta,
+                "decode_wall_ms": round(decode_ms, 3),
+                "decode_plus_chunk_wall_ms": round(both_ms, 3),
+                "chunk_exposed_ms": round(max(0.0, both_ms - decode_ms), 3),
+            }
+        )
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # baseline regression gate (--check)
 # ---------------------------------------------------------------------------
@@ -638,6 +762,22 @@ def check_baseline(baseline_path: str) -> list[str]:
         failures.append(
             f"migration_shapes[{name}]: in baseline but no longer benchmarked"
         )
+
+    base_pf = {r.get("shape"): r for r in base.get("prefill_shapes", [])}
+    expected = []
+    for name, model, b, chunk, prompt_len, bs, max_seq in PREFILL_SHAPES:
+        expected.append(name)
+        meta = prefill_cell_accounting(name, model, b, chunk, prompt_len, bs, max_seq)
+        row = base_pf.get(name)
+        if row is None:
+            failures.append(f"prefill_shapes[{name}]: missing from baseline")
+            continue
+        for key, val in meta.items():
+            cmp(f"prefill_shapes[{name}]", key, row.get(key), val)
+    for name in set(base_pf) - set(expected):
+        failures.append(
+            f"prefill_shapes[{name}]: in baseline but no longer benchmarked"
+        )
     return failures
 
 
@@ -684,6 +824,7 @@ def main() -> None:
         rows = run(iters=iters, smoke=args.smoke)
         decode_rows = run_decode(iters=iters, smoke=args.smoke)
         migration_rows = run_migration(iters=iters, smoke=args.smoke)
+        prefill_rows = run_prefill(iters=iters, smoke_mode=args.smoke)
     except AssertionError as e:  # parity failure must fail the gate loudly
         print(f"KERNEL PARITY FAILURE: {e}", file=sys.stderr)
         raise SystemExit(1)
@@ -723,13 +864,21 @@ def main() -> None:
             "decode-step-sized expert FFN; migration_exposed_ms = "
             "wall(step + slice) - wall(step) is the per-tick cost decode "
             "compute does not hide, and slice_mb / expert_mb / "
-            "ticks_to_commit are the deterministic accounting. The "
+            "ticks_to_commit are the deterministic accounting. "
+            "prefill_shapes measure the chunked-admission prefill lane "
+            "(ServeConfig(prefill_chunk=C)): the fused two-lane decode "
+            "step with a live chunk vs the no-op chunk; ttft_ticks, "
+            "decode_stall_ticks and chunk_hbm_mb (KV bytes the lane "
+            "writes + streams over one admission) are deterministic, and "
+            "chunk_exposed_ms = wall(decode + live chunk) - wall(decode + "
+            "no-op chunk) is the per-tick interleave cost. The "
             "deterministic columns are CI-gated: bench_kernels.py --check "
             "BENCH_kernels.json recomputes them and fails on drift."
         ),
         "shapes": rows,
         "decode_shapes": decode_rows,
         "migration_shapes": migration_rows,
+        "prefill_shapes": prefill_rows,
     }
     if args.smoke:
         print(json.dumps(doc, indent=2))

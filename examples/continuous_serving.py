@@ -41,12 +41,12 @@ prompts = [
 MAX_NEW = 8
 
 
-def make_server(batch, pool_pages):
+def make_server(batch, pool_pages, prefill_chunk=None):
     return Server(
         cfg, ctx, jax.tree.map(jnp.copy, params),
         ServeConfig(max_seq=64, batch=batch, paged=True, page_size=8,
                     pool_pages=pool_pages, slots_per_device=3, virtual_ep=4,
-                    alpha=0.1),
+                    alpha=0.1, prefill_chunk=prefill_chunk),
     )
 
 
@@ -58,12 +58,16 @@ for p in prompts:
     sched.run()
     ref.append(list(req.tokens_out))
 
-print("chaos run: 3 slots, 10-page pool, seeded fault plan...")
+print("chaos run: 3 slots, 10-page pool, chunked admission, faults...")
 plan = FaultPlan.chaos(seed=14, n_steps=12, n_devices=4, pressure_pages=5,
                        nan_slots=(0,))
 for f in plan:
     print(f"  step {f.step:>2}: {f.kind}")
-sched = RequestScheduler(make_server(batch=3, pool_pages=10), faults=plan)
+# prefill_chunk=8: admission rides the decode step's prefill lane, one
+# 8-token chunk per tick — live slots keep emitting while prompts load.
+sched = RequestScheduler(
+    make_server(batch=3, pool_pages=10, prefill_chunk=8), faults=plan
+)
 reqs = [
     sched.submit(p, max_new_tokens=MAX_NEW, arrival=i)
     for i, p in enumerate(prompts)
@@ -79,6 +83,19 @@ for i, r in enumerate(reqs):
     print(
         f"request {r.rid}: {r.state}, {len(r.tokens_out)} tokens, "
         f"{r.preemptions} preemption(s), parity={'OK' if match else 'FAIL'}"
+    )
+stats = sched.stats()
+print(
+    f"serving stats: max_ttft={stats['max_ttft_ticks']} ticks, "
+    f"max_stall={stats['max_stall_ticks']} ticks, "
+    f"queue_depth={stats['queue_depth']}, "
+    f"prefill_backlog={stats['prefill_backlog']} tokens"
+)
+for rid, s in stats["per_request"].items():
+    print(
+        f"  request {rid}: ttft={s['ttft_ticks']} ticks, "
+        f"stall={s['max_stall_ticks']}, tokens={s['n_tokens']}, "
+        f"preemptions={s['preemptions']}"
     )
 print(
     f"{'PARITY HELD' if ok else 'PARITY BROKEN'} under "

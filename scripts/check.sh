@@ -297,6 +297,54 @@ print(f"crash-restore smoke OK (killed at step {k}, "
       f"{len(prompts)} streams bit-identical)")
 EOF
 
+echo "== chunked-admission smoke (prefill lane in the decode step) =="
+python - <<'EOF'
+# A long prompt admits through the decode step's prefill lane (one chunk
+# per tick) while a live batch keeps emitting tokens. The live streams never
+# stall more than one tick, the newcomer's first token must land within
+# ceil(len/chunk)+1 ticks of admission, every stream must be bit-identical
+# to splice admission, and ONE compiled step program must have served
+# idle, decode-only and decode+chunk ticks alike.
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config, smoke
+from repro.models import transformer as T
+from repro.parallel.ctx import ParallelCtx
+from repro.runtime.scheduler import FINISHED, RequestScheduler
+from repro.runtime.serve import Server, ServeConfig
+
+cfg = smoke(get_config("llama3.2-1b"))
+params = T.init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+           for n in (4, 6, 40)]   # two live decoders, then one long prompt
+CHUNK = 8
+
+def run(prefill_chunk):
+    srv = Server(cfg, ParallelCtx(), jax.tree.map(jnp.copy, params),
+                 ServeConfig(max_seq=64, batch=3, paged=True, page_size=8,
+                             pool_pages=32, prefill_chunk=prefill_chunk))
+    s = RequestScheduler(srv)
+    reqs = [s.submit(p, max_new_tokens=10, arrival=[0, 0, 2][i])
+            for i, p in enumerate(prompts)]
+    s.run()
+    assert all(r.state == FINISHED for r in reqs), [r.state for r in reqs]
+    return srv, s, reqs
+
+srv_a, s_a, _ = run(None)
+srv_b, s_b, reqs = run(CHUNK)
+for rid, want in s_a.results().items():
+    assert np.array_equal(s_b.results()[rid], want), (rid, "stream diverged")
+stats = s_b.stats()
+assert stats["max_stall_ticks"] == 0, stats  # O(1) inter-token gap, always
+long = reqs[2]
+ticks = long.first_token_step - long.admitted_step + 1
+bound = -(-len(prompts[2]) // CHUNK) + 1
+assert ticks <= bound, (ticks, bound)
+assert srv_b._decode._cache_size() == 1, srv_b._decode._cache_size()
+print(f"chunked-admission smoke OK (ttft {ticks} <= {bound} ticks, "
+      f"stall 0, parity held, 1 program)")
+EOF
+
 echo "== kernel-dispatch bench smoke (interpret mode) =="
 python benchmarks/bench_kernels.py --smoke > /dev/null
 echo "bench smoke OK"

@@ -560,6 +560,75 @@ def decode_attention(
     return out, {"k": k_cache, "v": v_cache}
 
 
+def chunk_prefill_attention(
+    p: dict,
+    x: jax.Array,            # (1, C, d) — the chunk's hidden states
+    cache: dict,             # paged per-layer cache (shared pool, post-decode-write)
+    table: jax.Array,        # (NB,) int32 — the prefilling request's block table
+    start: jax.Array,        # scalar int32 — absolute position of chunk token 0
+    length: jax.Array,       # scalar int32 — valid tokens this chunk (0 = no-op)
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+) -> tuple[jax.Array, dict]:
+    """Prefill-lane attention for one chunk of one admitting request.
+
+    Runs *inside* the fused decode step, against the same shared page pool
+    the decode lane just wrote: the chunk's K/V scatter through ``table``
+    at logical slots ``start + i`` (full attention only — slot j holds
+    position j, so "causal within the chunk AND against already-written
+    pages" is the single mask ``kpos <= start + i``). Pad rows
+    (``i >= length``) scatter to the write-off page and attend to garbage;
+    their outputs are masked out of MoE routing by the caller and never
+    read. ``length = 0`` is the no-op chunk: one fused program serves
+    idle, decode-only and decode+chunk ticks alike.
+
+    The chunk's pages are disjoint from every live slot's table (the
+    serving allocator hands them out from the same pool), so the decode
+    lane never reads a half-written chunk and the chunk never perturbs a
+    live request — the isolation the splice-admission path got from a
+    separate batch-1 prefill, now without stalling the batch.
+    """
+    pool_k, pool_v = cache["pool_k"], cache["pool_v"]
+    bs = pool_k.shape[1]
+    nb = table.shape[0]
+    cap = nb * bs
+    c = x.shape[1]
+
+    q, k, v = qkv_proj(p, x, cfg, ctx)
+    pos = start + jnp.arange(c, dtype=jnp.int32)         # (C,) absolute
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, pos[None, :], cfg.rope_theta)
+        k = apply_rope(k, pos[None, :], cfg.rope_theta)
+
+    # Scatter this chunk's K/V through the block table. Valid rows land at
+    # logical slot == absolute position; pad rows go to the write-off page.
+    slot = jnp.minimum(pos, cap - 1)
+    valid = jnp.arange(c) < length
+    trash = pool_k.shape[0] - 1
+    page = jnp.where(valid, table[slot // bs], trash)    # (C,)
+    row = slot % bs
+    pool_k = pool_k.at[page, row].set(k[0])
+    pool_v = pool_v.at[page, row].set(v[0])
+
+    # Attend over everything written so far: previous chunks' pages plus
+    # this chunk, causally. Masked (future / never-written) slots score
+    # exactly zero after softmax, so the gather over the full table is
+    # bit-identical to a tight prefill over the same prefix.
+    from repro.kernels.flash_decode.ref import gather_pages
+
+    k_all = gather_pages(pool_k, table[None, :])         # (1, cap, K, hd)
+    v_all = gather_pages(pool_v, table[None, :])
+    mask = jnp.arange(cap)[None, :] <= pos[:, None]      # (C, cap)
+    o = gqa_attend(q, k_all, v_all, mask)
+    o = ctx.shard(o, ctx.batch_spec, None, ctx.model_axis, None)
+    out = out_proj(p, o, ctx)
+    new_cache = {
+        "pool_k": pool_k, "pool_v": pool_v,
+        "tables": cache["tables"], "lengths": cache["lengths"],
+    }
+    return out, new_cache
+
+
 def _seq_parallel_decode_eligible(q, k_cache, ctx: ParallelCtx) -> bool:
     """Sequence-parallel decode: the cache's seq dim rides the model axis
     and each shard runs flash-decode partials locally, LSE-merged with a

@@ -32,6 +32,7 @@ from repro.models.attention import (
     attn_init,
     attention,
     cache_init,
+    chunk_prefill_attention,
     cross_attention,
     cross_kv,
     decode_attention,
@@ -378,6 +379,7 @@ def decode_step(
     embeds=None,                # encdec: unused at decode (cross kv cached)
     placement=None,             # (slot_of, n_replicas) from the NI-Balancer
     slot_mask=None,             # (B,) bool — False = empty/released batch row
+    chunk=None,                 # prefill-lane operand (see below); None = off
 ):
     """One serve step: consume one token, update the cache, emit logits.
 
@@ -385,17 +387,42 @@ def decode_step(
     rows still flow through the step (fixed shapes, no recompile) but are
     excluded from MoE routing, so a half-empty batch never spends expert
     bucket capacity on dead slots. Their logits are garbage by contract —
-    the scheduler owns which rows mean anything."""
+    the scheduler owns which rows mean anything.
+
+    ``chunk`` adds the prefill lane (paged ``attn`` pattern only): a dict
+    ``{"tokens": (1, C) int32, "table": (NB,) int32, "start": scalar,
+    "length": scalar}`` carrying one fixed-size chunk of the admitting
+    request's context. The chunk runs through every layer alongside the
+    decode tokens — same weights, same placement, one compiled program —
+    writing its K/V through ``table`` (see
+    :func:`~repro.models.attention.chunk_prefill_attention`) and routing
+    only its ``length`` valid rows through MoE. ``length = 0`` is the
+    no-op chunk, so idle, decode-only and decode+chunk ticks all hit the
+    same trace. ``stats["chunk_logits"]`` holds the last valid chunk
+    position's logits ``(1, 1, V)``: on the final chunk these emit the
+    request's first token, bit-identical to a whole-context prefill."""
     x = _embed(params, token, cfg, ctx)
     pos = cache["pos"]
     pat = cfg.block_pattern
     new_cache = dict(cache)
+    if chunk is not None and pat != "attn":
+        raise ValueError(
+            f"chunked prefill requires block_pattern='attn', got {pat}"
+        )
 
     aux = zero_aux(cfg)
+    chunk_logits = None
     if pat == "attn":
+        if chunk is not None:
+            xc = _embed(params, chunk["tokens"], cfg, ctx)       # (1, C, d)
+            n_chunk = chunk["tokens"].shape[1]
+            cvalid = (jnp.arange(n_chunk) < chunk["length"])[None, :]
 
         def body(carry, inp):
-            h, a_sum = carry
+            if chunk is None:
+                h, a_sum = carry
+            else:
+                h, hc, a_sum = carry
             p_l, c_l = inp
             z = rms_norm(h, p_l["ln1"], cfg.norm_eps)
             o, c_new = decode_attention(p_l["attn"], z, c_l, pos, cfg, ctx)
@@ -408,14 +435,46 @@ def decode_step(
                 )
             else:
                 y, a = mlp_apply(p_l["mlp"], z2, ctx), zero_aux(cfg)
-            return (h + y, jax.tree.map(jnp.add, a_sum, a)), c_new
+            h = h + y
+            if chunk is None:
+                return (h, jax.tree.map(jnp.add, a_sum, a)), c_new
+            # Prefill lane: the chunk flows through the same layer against
+            # the pool the decode lane just wrote (disjoint pages).
+            zc = rms_norm(hc, p_l["ln1"], cfg.norm_eps)
+            oc, c_new = chunk_prefill_attention(
+                p_l["attn"], zc, c_new, chunk["table"],
+                chunk["start"], chunk["length"], cfg, ctx,
+            )
+            hc = hc + oc
+            z2c = rms_norm(hc, p_l["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                yc, ac = moe_apply(
+                    p_l["moe"], z2c, cfg, ctx, placement=placement,
+                    token_mask=cvalid,
+                )
+            else:
+                yc, ac = mlp_apply(p_l["mlp"], z2c, ctx), zero_aux(cfg)
+            hc = hc + yc
+            a_sum = jax.tree.map(jnp.add, a_sum, jax.tree.map(jnp.add, a, ac))
+            return (h, hc, a_sum), c_new
 
-        (x, aux), new_layers = jax.lax.scan(
-            body,
-            (x, zero_aux(cfg)),
-            (params["layers"], cache["layers"]),
-            unroll=ctx.full_unroll,
-        )
+        if chunk is None:
+            (x, aux), new_layers = jax.lax.scan(
+                body,
+                (x, zero_aux(cfg)),
+                (params["layers"], cache["layers"]),
+                unroll=ctx.full_unroll,
+            )
+        else:
+            (x, xc, aux), new_layers = jax.lax.scan(
+                body,
+                (x, xc, zero_aux(cfg)),
+                (params["layers"], cache["layers"]),
+                unroll=ctx.full_unroll,
+            )
+            last = jnp.clip(chunk["length"] - 1, 0, n_chunk - 1)
+            xl = jax.lax.dynamic_slice_in_dim(xc, last, 1, axis=1)
+            chunk_logits = _logits(params, xl, cfg, ctx)
         new_cache["layers"] = new_layers
 
     elif pat == "zamba":
@@ -446,6 +505,8 @@ def decode_step(
 
     new_cache["pos"] = pos + 1
     stats = {"expert_counts": aux["counts"]}
+    if chunk_logits is not None:
+        stats["chunk_logits"] = chunk_logits
     return _logits(params, x, cfg, ctx), new_cache, stats
 
 

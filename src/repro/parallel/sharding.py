@@ -45,6 +45,22 @@ def placement_specs() -> tuple[P, P]:
     return P(None, None), P(None)
 
 
+def chunk_specs() -> dict:
+    """PartitionSpecs for the decode step's prefill-chunk operand
+    (``transformer.decode_step(chunk=...)``): replicated everywhere. The
+    chunk is batch-1 host-built metadata — ``tokens (1, C)``, ``table
+    (NB,)``, scalar ``start``/``length`` — too small to shard and read by
+    every rank's attention gather; replication mirrors ``placement_specs``
+    (the other per-tick host-fed operand) so the fused step's layout is
+    stable across idle, decode-only and decode+chunk ticks."""
+    return {
+        "tokens": P(None, None),
+        "table": P(None),
+        "start": P(),
+        "length": P(),
+    }
+
+
 def param_spec(path: str, shape: tuple[int, ...], cfg: ModelConfig, n_model: int) -> P:
     """PartitionSpec for one parameter leaf (leading stacked-layer dims are
     never sharded)."""

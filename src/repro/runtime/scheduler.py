@@ -20,8 +20,15 @@ Per tick (``step()``):
    step (device death, stragglers, pool pressure, NaN logits);
 2. **admission** — FIFO over arrived requests, watermark-gated against
    ``PagePool`` occupancy (strict FIFO among arrived requests: the head
-   blocks, so admission is starvation-free). Each admission is a batch-1
-   prefill spliced into one empty slot (``Server.prefill_into_slot``);
+   blocks, so admission is starvation-free). With
+   ``ServeConfig(prefill_chunk=C)`` admission only stakes out a slot and
+   pre-allocates pages; the request then rides the decode step's prefill
+   lane, one C-token chunk per tick, until the final chunk's logits emit
+   its first token and the slot flips to DECODING — live decode slots
+   never stall more than the one fused step they already share. Without
+   ``prefill_chunk``, admission is a batch-1 prefill spliced into one
+   empty slot (``Server.prefill_into_slot``), which stalls the batch for
+   the full prompt length;
 3. **headroom** — if the live requests' next writes need more fresh pages
    than the pool holds, preempt (victim: fewest decoded tokens, youngest
    first) until the step cannot exhaust the pool — instead of the
@@ -73,6 +80,24 @@ class Request:
     tokens_out: list = dataclasses.field(default_factory=list)
     preemptions: int = 0             # pool evictions + fault requeues
     error: str | None = None
+    # Chunked-admission progress: context tokens already prefilled (the
+    # chunk lane has written their KV). Meaningful only while PREFILLING;
+    # reset to 0 on preemption/crash (the KV dies with the slot/process
+    # and the standard recompute re-prefills from chunk zero).
+    prefill_pos: int = 0
+    # Serving stats (ticks are scheduler steps, not wall time).
+    admitted_step: int | None = None     # first PREFILLING/DECODING tick
+    first_token_step: int | None = None  # tick the first token was emitted
+    last_token_step: int | None = None   # tick of the most recent token
+    max_stall: int = 0                   # widest gap between tokens, -1 tick
+
+    @property
+    def ttft_ticks(self) -> int | None:
+        """Ticks from arrival until the first token existed (1 = the very
+        first eligible tick emitted it). None until it has."""
+        if self.first_token_step is None:
+            return None
+        return self.first_token_step - self.arrival + 1
 
     @property
     def n_decoded(self) -> int:
@@ -138,6 +163,11 @@ class RequestScheduler:
         self._hostage: list[int] = []        # pages stolen by pool_pressure
         self._poison: set[int] | None = None  # nan_logits slots this tick
         self.last_snapshot = None            # most recent ServerSnapshot
+        # Chunked admission (ServeConfig.prefill_chunk): at most one request
+        # is mid-prefill at a time — the head of admission, one chunk per
+        # tick through the decode step's prefill lane.
+        self.chunk: int | None = server.scfg.prefill_chunk
+        self._prefilling: Request | None = None
 
     # -- submission ----------------------------------------------------------
 
@@ -208,6 +238,20 @@ class RequestScheduler:
 
     def _admit(self, req: Request, slot: int) -> None:
         req.state = PREFILLING
+        req.admitted_step = self.step_no
+        if self.chunk:
+            # Chunked admission: no device work here — just stake out the
+            # slot and pre-allocate the pages. The decode step's prefill
+            # lane writes one chunk per tick (step() drives it) until the
+            # final chunk's logits emit the first token and the slot flips
+            # to DECODING.
+            req.slot = slot
+            req.prefill_pos = 0
+            self.slots[slot] = req
+            self._prefilling = req
+            self.server.begin_chunk_prefill(slot, req.context_len)
+            self.events.append((self.step_no, "admit", req.rid))
+            return
         ctx_tokens = np.concatenate(
             [req.prompt, np.asarray(req.tokens_out, np.int32)]
         )
@@ -230,6 +274,13 @@ class RequestScheduler:
         """Append an emitted token; retire on EOS / max-token. Returns
         whether the request finished."""
         req.tokens_out.append(tok)
+        if req.first_token_step is None:
+            req.first_token_step = self.step_no
+        elif req.last_token_step is not None:
+            req.max_stall = max(
+                req.max_stall, self.step_no - req.last_token_step - 1
+            )
+        req.last_token_step = self.step_no
         hit_eos = req.eos_id is not None and tok == req.eos_id
         if hit_eos or len(req.tokens_out) >= req.max_new_tokens:
             self._retire(req, FINISHED)
@@ -249,8 +300,17 @@ class RequestScheduler:
     def _preempt(self, req: Request, reason: str) -> None:
         """Evict a running request; requeue it at the front for recompute,
         or FAIL it past the retry budget. Only this request is affected —
-        the step loop and its batchmates keep going."""
-        self.cache = self.server.release(req.slot, self.cache)
+        the step loop and its batchmates keep going. A request preempted
+        mid-prefill never emitted a token, so nothing is ever un-counted:
+        its chunk pages go back to the pool and re-admission restarts the
+        chunk state machine from position 0."""
+        if req.state == PREFILLING and self.chunk:
+            self.server.abort_chunk_prefill(req.slot)
+            if self._prefilling is req:
+                self._prefilling = None
+            req.prefill_pos = 0
+        else:
+            self.cache = self.server.release(req.slot, self.cache)
         self.slots[req.slot] = None
         req.slot = None
         req.preemptions += 1
@@ -297,6 +357,11 @@ class RequestScheduler:
 
     def _admit_ready(self) -> None:
         while self.queue:
+            if self.chunk and self._prefilling is not None:
+                # One admission in flight at a time: the prefill lane is a
+                # single chunk per tick, and strict FIFO means nobody may
+                # overtake the head mid-prefill anyway.
+                return
             free = self._free_slots()
             if not free:
                 return
@@ -317,11 +382,19 @@ class RequestScheduler:
         while True:
             live = self._live()
             deficit = (
-                sum(srv.next_write_unbacked(r.slot) for r in live)
+                sum(
+                    srv.next_write_unbacked(r.slot)
+                    for r in live
+                    if r.state == DECODING
+                )
                 - srv.page_pool.n_free
             )
             if deficit <= 0 or not live:
                 return
+            # A mid-prefill request holds every page it will ever need (no
+            # lazy growth), so it contributes nothing to the deficit — but
+            # it is the cheapest victim (zero decoded tokens) and evicting
+            # it returns the most pages at once.
             victim = min(live, key=lambda r: (r.n_decoded, -r.rid))
             self._preempt(victim, "pool-exhausted")
 
@@ -380,16 +453,35 @@ class RequestScheduler:
         self._drain_migrations()
         finished: list[Request] = []
         if self._live():
+            chunk = None
+            chunk_n = 0
+            pf = self._prefilling
+            if pf is not None:
+                # One fixed-size chunk of the head-of-admission request's
+                # context rides this tick's step (right-padded — the shape
+                # is jit-stable; `length` marks the valid rows).
+                ctx_tokens = np.concatenate(
+                    [pf.prompt, np.asarray(pf.tokens_out, np.int32)]
+                )
+                chunk_n = min(self.chunk, len(ctx_tokens) - pf.prefill_pos)
+                buf = np.zeros(self.chunk, np.int32)
+                buf[:chunk_n] = ctx_tokens[
+                    pf.prefill_pos : pf.prefill_pos + chunk_n
+                ]
+                chunk = self.server.chunk_operand(
+                    pf.slot, buf, pf.prefill_pos, chunk_n
+                )
             logits, self.cache = self.server.decode(
-                jnp.asarray(self.next_tok), self.cache
+                jnp.asarray(self.next_tok), self.cache, chunk=chunk
             )
             rows = np.asarray(logits[:, -1])                 # (B, V)
-            if self._poison is not None:
+            poison = self._poison or set()
+            if poison:
                 rows = rows.copy()
-                rows[sorted(self._poison)] = np.nan
+                rows[sorted(poison)] = np.nan
             for slot, req in enumerate(self.slots):
-                if req is None:
-                    continue
+                if req is None or req.state != DECODING:
+                    continue    # PREFILLING rows are masked garbage
                 row = rows[slot]
                 if not np.isfinite(row).all():
                     # Numerics blew up for this row only: requeue it for a
@@ -399,6 +491,24 @@ class RequestScheduler:
                     continue
                 if self._push_token(req, int(np.argmax(row))):
                     finished.append(req)
+            if pf is not None:
+                pf.prefill_pos += chunk_n
+                if pf.prefill_pos >= pf.context_len:
+                    # Final chunk: its last-position logits emit the first
+                    # token — for a recompute, bit-for-bit the token the
+                    # preempted decode would have produced next — and the
+                    # slot flips live atomically (table + length splice).
+                    crow = np.asarray(self.server.last_chunk_logits[0, -1])
+                    if pf.slot in poison or not np.isfinite(crow).all():
+                        self._preempt(pf, "non-finite-logits")
+                    else:
+                        self.cache = self.server.finish_chunk_prefill(
+                            pf.slot, self.cache, pf.context_len
+                        )
+                        pf.state = DECODING
+                        self._prefilling = None
+                        if self._push_token(pf, int(np.argmax(crow))):
+                            finished.append(pf)
         self._poison = None
         self.step_no += 1
         return finished
@@ -447,4 +557,43 @@ class RequestScheduler:
         FAILED requests report what they produced before failing)."""
         return {
             r.rid: np.asarray(r.tokens_out, np.int32) for r in self.requests
+        }
+
+    def stats(self) -> dict:
+        """Serving statistics in scheduler ticks (not wall time).
+
+        ``prefill_backlog`` counts context tokens still to prefill: the
+        in-flight request's remaining chunks plus the full context of every
+        queued request. ``ttft_ticks`` is arrival-to-first-token (1 = the
+        first eligible tick emitted it; ``ceil(len/chunk)`` for uncontended
+        chunked admission); ``max_stall_ticks`` is the widest gap between a
+        request's consecutive tokens minus one — 0 means every tick after
+        the first token emitted one, i.e. O(1) inter-token latency even
+        while long prompts were being admitted."""
+        backlog = sum(r.context_len for r in self.queue)
+        if self._prefilling is not None:
+            pf = self._prefilling
+            backlog += pf.context_len - pf.prefill_pos
+        ttfts = [
+            r.ttft_ticks for r in self.requests if r.ttft_ticks is not None
+        ]
+        return {
+            "step": self.step_no,
+            "queue_depth": len(self.queue),
+            "prefill_backlog": backlog,
+            "n_preempted": self.n_preempted,
+            "max_ttft_ticks": max(ttfts, default=None),
+            "max_stall_ticks": max(
+                (r.max_stall for r in self.requests), default=0
+            ),
+            "per_request": {
+                r.rid: {
+                    "state": r.state,
+                    "ttft_ticks": r.ttft_ticks,
+                    "max_stall_ticks": r.max_stall,
+                    "n_tokens": r.n_decoded,
+                    "preemptions": r.preemptions,
+                }
+                for r in self.requests
+            },
         }

@@ -87,6 +87,57 @@ class ServeConfig:
     # only the inter-device hop is notional (collectives.ep_moe_local).
     # Ignored under a real multi-device mesh (the model axis wins).
     virtual_ep: int | None = None
+    # Chunked prefill: admission prefills run as a *lane inside the decode
+    # step* — `prefill_chunk` context tokens per tick alongside the live
+    # decode batch, so a long prompt never stalls running requests and
+    # queued TTFT is bounded by ceil(len / prefill_chunk) ticks. None =
+    # the splice-admission path (whole-prompt batch-1 prefill spliced into
+    # the cache). Requires paged=True and full (non-windowed) attention;
+    # must be a positive multiple of page_size no larger than max_seq.
+    prefill_chunk: int | None = None
+
+    def __post_init__(self):
+        validate_prefill_chunk(
+            self.prefill_chunk, self.page_size, self.max_seq, self.paged
+        )
+
+
+def validate_prefill_chunk(
+    chunk: int | None, page_size: int, max_seq: int, paged: bool
+) -> None:
+    """Up-front validation for ``ServeConfig(prefill_chunk=...)``.
+
+    Same convention as ``validate_ep_token_split``: a bad chunk size would
+    otherwise surface as an opaque scatter/spec error deep inside the jitted
+    step (or silently mis-page the chunk's KV). Fail at construction,
+    naming the offending numbers."""
+    if chunk is None:
+        return
+    chunk = int(chunk)
+    if chunk <= 0:
+        raise ValueError(
+            f"ServeConfig: prefill_chunk={chunk} must be a positive number "
+            f"of tokens (use prefill_chunk=None for splice admission)"
+        )
+    if chunk % page_size:
+        raise ValueError(
+            f"ServeConfig: prefill_chunk={chunk} is not page-size-aligned "
+            f"(page_size={page_size}) — each chunk must fill whole KV "
+            f"pages so the chunk scatter never straddles an unallocated "
+            f"block"
+        )
+    if chunk > max_seq:
+        raise ValueError(
+            f"ServeConfig: prefill_chunk={chunk} exceeds max_seq={max_seq} "
+            f"— a chunk can never hold more context than one request's KV "
+            f"capacity"
+        )
+    if not paged:
+        raise ValueError(
+            "ServeConfig: prefill_chunk requires paged=True — the chunk "
+            "lane writes KV through a page table (dense caches have no "
+            "per-request block mapping to write through)"
+        )
 
 
 # A revived device's HBM is blank (no on-wafer disk); its free slot rows are
@@ -244,6 +295,29 @@ class Server:
             # host-side mirror of per-request written counts (lengths): the
             # block-boundary check must not force a device sync per token.
             self._written: np.ndarray | None = None
+            # Chunked-prefill ledger: pages/table-row of the (at most one)
+            # request mid-prefill, kept OUT of `_pages`/`_tables` until the
+            # final chunk lands — `_ensure_pages` and the decode lane must
+            # treat the slot as empty (trash table, length 0) while the
+            # chunk lane writes its KV through the side row.
+            self._prefill_pages: dict[int, list[int]] = {}
+            self._prefill_row: dict[int, np.ndarray] = {}
+            self.last_chunk_logits = None
+            if serve_cfg.prefill_chunk:
+                if cfg.sliding_window:
+                    raise ValueError(
+                        f"prefill_chunk requires full attention: sliding_"
+                        f"window={cfg.sliding_window} breaks the chunk "
+                        f"lane's slot-j-holds-position-j invariant (the "
+                        f"ring remaps logical slots as context wraps)"
+                    )
+                if serve_cfg.prefill_chunk % self.page_size:
+                    raise ValueError(
+                        f"prefill_chunk={serve_cfg.prefill_chunk} is not a "
+                        f"multiple of the effective page size "
+                        f"{self.page_size} (paged_layout shrank it from "
+                        f"{serve_cfg.page_size})"
+                    )
             prefill_kw = dict(
                 paged=True,
                 page_size=serve_cfg.page_size,
@@ -261,6 +335,14 @@ class Server:
             functools.partial(T.decode_step, cfg=cfg, ctx=ctx),
             donate_argnums=(2,),
         )
+        # Chunk operands are tiny host-built metadata; under a mesh they
+        # are placed explicitly (replicated — see sharding.chunk_specs) so
+        # the fused step never re-triggers layout inference per tick.
+        self._chunk_shardings = None
+        if serve_cfg.paged and serve_cfg.prefill_chunk and ctx.mesh is not None:
+            from repro.parallel.sharding import chunk_specs, to_shardings
+
+            self._chunk_shardings = to_shardings(ctx.mesh, chunk_specs())
         self._prefill = jax.jit(
             functools.partial(
                 T.prefill, cfg=cfg, ctx=ctx, max_seq=serve_cfg.max_seq,
@@ -330,6 +412,8 @@ class Server:
         )
         for slot in list(self._pages):
             self.release(slot)
+        for slot in list(self._prefill_pages):
+            self.abort_chunk_prefill(slot)
         self._released = set()
         self._tables = np.full((b, self.n_blocks), self.trash_page, np.int32)
         self._tables_dirty = False
@@ -397,6 +481,8 @@ class Server:
         b = self.scfg.batch
         for slot in list(self._pages):
             self.release(slot)
+        for slot in list(self._prefill_pages):
+            self.abort_chunk_prefill(slot)
         self._released = set(range(b))
         self._tables = np.full((b, self.n_blocks), self.trash_page, np.int32)
         self._tables_dirty = False
@@ -466,6 +552,108 @@ class Server:
         layers["lengths"] = layers["lengths"].at[:, slot].set(true_len)
         return logits, {**cache, "layers": layers}
 
+    # -- chunked prefill (the admission lane inside the decode step) ---------
+
+    def begin_chunk_prefill(self, slot: int, length: int) -> None:
+        """Start a chunked admission into batch row ``slot``: allocate every
+        page ``length`` context rows will need, into a *side* ledger. The
+        live cache is untouched — the slot's device table row stays at the
+        write-off page and its length stays 0 for the whole prefill, so the
+        decode lane's masked write for this row keeps landing on the trash
+        page instead of corrupting the chunk's real position-0 KV. The
+        chunk lane writes through the side row (``chunk_operand``);
+        ``finish_chunk_prefill`` splices the mapping in atomically when the
+        last chunk lands."""
+        if not self.scfg.prefill_chunk:
+            raise ValueError(
+                "begin_chunk_prefill requires ServeConfig(prefill_chunk=N)"
+            )
+        if slot in self._pages or slot in self._prefill_pages:
+            raise RuntimeError(
+                f"slot {slot} is still admitted or mid-prefill; release or "
+                f"abort it before reuse"
+            )
+        cap = self.n_blocks * self.page_size
+        need = min(-(-min(int(length), cap) // self.page_size), self.n_blocks)
+        pages = self.page_pool.alloc(need)
+        row = np.full(self.n_blocks, self.trash_page, np.int32)
+        row[:need] = pages
+        self._prefill_pages[slot] = pages
+        self._prefill_row[slot] = row
+
+    def chunk_operand(self, slot: int, tokens, start: int, length: int) -> dict:
+        """Build the decode step's prefill-lane operand for one chunk of the
+        request mid-prefill in ``slot``. ``tokens`` is the fixed-size
+        ``(prefill_chunk,)`` buffer (right-padded past ``length``);
+        ``start`` is the request's prefill progress (absolute position of
+        ``tokens[0]``)."""
+        if slot not in self._prefill_row:
+            raise RuntimeError(
+                f"slot {slot} has no chunked prefill in flight "
+                f"(begin_chunk_prefill first)"
+            )
+        tokens = np.asarray(tokens, np.int32).reshape(1, -1)
+        if tokens.shape[1] != self.scfg.prefill_chunk:
+            raise ValueError(
+                f"chunk_operand: got {tokens.shape[1]} tokens, want exactly "
+                f"prefill_chunk={self.scfg.prefill_chunk} (right-pad past "
+                f"`length` — the shape is jit-stable)"
+            )
+        return {
+            "tokens": jnp.asarray(tokens),
+            "table": jnp.asarray(self._prefill_row[slot]),
+            "start": jnp.asarray(int(start), jnp.int32),
+            "length": jnp.asarray(int(length), jnp.int32),
+        }
+
+    def noop_chunk(self) -> dict:
+        """The idle prefill-lane operand (length 0, all-trash table): padded
+        rows write to the write-off page and route nowhere, so ticks with no
+        admission in flight reuse the exact same compiled program."""
+        return {
+            "tokens": jnp.zeros((1, self.scfg.prefill_chunk), jnp.int32),
+            "table": jnp.full((self.n_blocks,), self.trash_page, jnp.int32),
+            "start": jnp.zeros((), jnp.int32),
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+    def finish_chunk_prefill(self, slot: int, cache: dict, length: int) -> dict:
+        """The final chunk landed: atomically flip ``slot`` live. The
+        chunk lane already wrote every KV row into the pool through the
+        side table, so this is pure mapping surgery — move the pages into
+        the live ledger and splice the table row + true length into the
+        device cache (the exact splice ``prefill_into_slot`` does, minus
+        the pool copy it needed for its separate batch-1 cache)."""
+        if slot not in self._prefill_pages:
+            raise RuntimeError(
+                f"slot {slot} has no chunked prefill in flight"
+            )
+        if self._written is None:
+            self._written = np.zeros(self.scfg.batch, np.int32)
+        self._pages[slot] = self._prefill_pages.pop(slot)
+        self._tables[slot] = self._prefill_row.pop(slot)
+        self._released.discard(slot)
+        self._written[slot] = int(length)
+        self._tables_dirty = False
+        layers = dict(cache["layers"])
+        layers["tables"] = self._stacked_tables(layers["tables"].shape[0])
+        layers["lengths"] = layers["lengths"].at[:, slot].set(int(length))
+        return {**cache, "layers": layers}
+
+    def abort_chunk_prefill(self, slot: int) -> None:
+        """Tear down a mid-prefill admission (preemption, device pressure,
+        crash recovery): free the side pages back to the pool. Nothing was
+        ever spliced into the live cache, so there is no device state to
+        undo — the half-written pool pages are unreachable once freed and
+        get overwritten by their next owner."""
+        if slot not in self._prefill_pages:
+            raise SlotReleaseError(
+                f"abort_chunk_prefill of slot {slot}, which has no chunked "
+                f"prefill in flight"
+            )
+        self.page_pool.free(self._prefill_pages.pop(slot))
+        del self._prefill_row[slot]
+
     def next_write_unbacked(self, slot: int) -> bool:
         """Would this request's next decode write need a fresh pool page
         (its block table doesn't back the target block yet)? The scheduler
@@ -508,7 +696,20 @@ class Server:
         layers["tables"] = self._stacked_tables(layers["tables"].shape[0])
         return {**cache, "layers": layers}
 
-    def decode(self, token, cache):
+    def decode(self, token, cache, chunk: dict | None = None):
+        """One fused step. With ``ServeConfig(prefill_chunk=N)`` a chunk
+        operand is ALWAYS passed to the jitted step — ``chunk=None`` here
+        substitutes the no-op chunk — so idle, decode-only and decode+chunk
+        ticks compile to one program per shape."""
+        if self.scfg.prefill_chunk:
+            if chunk is None:
+                chunk = self.noop_chunk()
+            if self._chunk_shardings is not None:
+                chunk = jax.device_put(chunk, self._chunk_shardings)
+        elif chunk is not None:
+            raise ValueError(
+                "decode(chunk=...) requires ServeConfig(prefill_chunk=N)"
+            )
         if self._pos is None:   # cache primed outside this Server
             self._pos = int(cache["pos"])
         pos = self._pos
@@ -542,16 +743,26 @@ class Server:
             self.drain_migrations()
         placement = self.table.device_view() if self.use_balancer else None
         slot_mask = None
-        if self.scfg.paged and self._released:
+        if self.scfg.paged:
             # Continuous batching: released/empty rows still step (fixed
             # shapes) but are masked out of MoE routing so they never spend
-            # expert bucket capacity or skew the balancer's counts.
+            # expert bucket capacity or skew the balancer's counts. Always
+            # an array (all-live when nothing is released): were it None on
+            # full batches, the mask's appearance after the first retire
+            # would change the step's pytree structure and force a second
+            # compile — one program must serve idle, decode-only and
+            # decode+chunk ticks alike.
             live = np.ones(token.shape[0], bool)
             live[sorted(self._released)] = False
             slot_mask = jnp.asarray(live)
         logits, cache, stats = self._decode(
-            self.params, token, cache, placement=placement, slot_mask=slot_mask
+            self.params, token, cache, placement=placement,
+            slot_mask=slot_mask, chunk=chunk,
         )
+        # Chunk-lane logits (last valid chunk position): on the final chunk
+        # of an admission these emit the request's first token. Host mirror
+        # — the scheduler reads it right after the step it drove.
+        self.last_chunk_logits = stats.get("chunk_logits")
         if self.scfg.paged and self._written is not None:
             for slot in range(len(self._written)):
                 if slot not in self._released:

@@ -107,6 +107,15 @@ def snapshot_scheduler(sched) -> ServerSnapshot:
                 "state": r.state,
                 "preemptions": int(r.preemptions),
                 "error": r.error,
+                # Chunked-admission progress + serving stats. `prefill_pos`
+                # is informational only: the chunk KV died with the crashed
+                # process, so restore requeues the request and re-prefills
+                # from chunk zero regardless.
+                "prefill_pos": int(r.prefill_pos),
+                "admitted_step": r.admitted_step,
+                "first_token_step": r.first_token_step,
+                "last_token_step": r.last_token_step,
+                "max_stall": int(r.max_stall),
             }
         )
         prompts[r.rid] = np.asarray(r.prompt, np.int32).copy()
@@ -264,6 +273,14 @@ def restore_scheduler(
             tokens_out=[int(x) for x in snap.emitted[rid]],
             preemptions=int(rec["preemptions"]),
             error=rec["error"],
+            # prefill_pos deliberately left 0: requeued requests restart
+            # their chunk state machine (KV died with the process). The
+            # stats fields survive so ttft/stall numbers span the crash.
+            # (.get: snapshots from before chunked admission lack them.)
+            admitted_step=rec.get("admitted_step"),
+            first_token_step=rec.get("first_token_step"),
+            last_token_step=rec.get("last_token_step"),
+            max_stall=int(rec.get("max_stall", 0)),
         )
         by_rid[rid] = req
         sched.requests.append(req)

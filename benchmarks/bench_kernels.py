@@ -59,10 +59,11 @@ Usage::
     PYTHONPATH=src python benchmarks/bench_kernels.py --check BENCH_kernels.json
 
 ``--smoke`` runs one tiny FFN cell + one tiny decode cell + one tiny
-stepped-migration cell + one tiny chunked-admission cell with 2 iterations
-(interpret mode on CPU) and exits non-zero on any parity failure — a
-kernel-dispatch, paged-decode, sliced-copy or prefill-lane regression
-fails the gate even when the full parity suite isn't run.
+stepped-migration cell + one tiny chunked-admission cell + one tiny
+chunked-EP-dispatch cell with 2 iterations (interpret mode on CPU) and
+exits non-zero on any parity failure — a kernel-dispatch, paged-decode,
+sliced-copy, prefill-lane or chunk-pipeline regression fails the gate
+even when the full parity suite isn't run.
 
 ``--check BASELINE.json`` recomputes every **deterministic** column (shape
 metadata, FLOP accounting, per-leg HBM-byte accounting — not wall-clock,
@@ -101,7 +102,7 @@ from repro.kernels.gmm.ops import (
     expert_ffn_ragged,
 )
 from repro.kernels.gmm.ref import expert_ffn_ref
-from repro.kernels.registry import default_interpret
+from repro.kernels.registry import default_interpret, expert_ffn_from_rows
 from repro.parallel.collectives import (
     bucket_combine,
     bucket_dispatch,
@@ -163,6 +164,44 @@ PREFILL_SHAPES = [
     ("prefill_interleave_c16", "llama3.2-1b", 3, 16, 48, 8, 64),
 ]
 PREFILL_SMOKE_SHAPES = [("prefill_smoke", "llama3.2-1b", 2, 8, 16, 8, 32)]
+
+# Chunked EP dispatch cells: (name, EP, SPD, CAP, D, F, chunk_counts,
+# balanced). One cell = one EP step's expert hot path — EP ranks x SPD
+# expert groups per rank at capacity CAP — run single-shot (ep_chunks=1)
+# and chunked (each K in chunk_counts): the per-chunk fused row-FFN over
+# K contiguous slices of the rank-compacted row layout, exactly the
+# per-chunk `expert_ffn_from_rows` calls the pipelined
+# `ep_moe_shardmap` fused branch issues between its all_to_all legs.
+# Deterministic gated columns per K: per-chunk dispatch/combine HBM
+# bytes (same ceil-tile convention as the FFN cells — per-chunk offsets
+# keep BOTH legs compact, so the K lists sum to the single-shot
+# numbers), per-chunk exchange wire bytes (the statically shaped
+# all_to_all buffer splits exactly K ways), and `exposed_comm_ms` — the
+# analytic pipeline schedule's wall(step) − wall(overlapped ideal):
+# with D_i/B_i the dispatch/combine leg times and C_i the chunk-i
+# compute time, chunk i's compute slot must cover chunk i−1's combine
+# and chunk i+1's dispatch, so
+#   exposed(K) = D_0 + B_{K-1} + sum_i max(0, B_{i-1} + D_{i+1} - C_i)
+# (absent terms at the boundaries). K=1 degenerates to D + B — the two
+# synchronous walls — and every K>1 is strictly below it (asserted).
+# The model uses the fixed EP_WIRE_GBPS / EP_MODEL_TFLOPS constants so
+# the column is seed-deterministic and --check-gated; `wall_ms` per K
+# is measured (interpret semantics off-TPU) and NOT gated.
+EP_CHUNK_SHAPES = [
+    ("epchunk_balanced_8x64", 4, 2, 64, 64, 128, (1, 2), True),
+    ("epchunk_skewed_16x64", 4, 4, 64, 128, 256, (1, 2, 4), False),
+    ("epchunk_skewed_32x32", 8, 4, 32, 128, 256, (1, 2, 4), False),
+]
+EP_CHUNK_SMOKE_SHAPES = [("epchunk_smoke", 2, 2, 16, 16, 32, (1, 2), False)]
+
+# Fixed analytic-model constants for the exposed-comm schedule: a
+# mid-range per-device all_to_all leg bandwidth and MXU throughput.
+# Deliberately NOT measured — the exposed_comm_ms column is a
+# deterministic schedule property (what the pipeline hides at a given
+# comm:compute ratio), not a backend benchmark; changing these changes
+# the committed baseline.
+EP_WIRE_GBPS = 40.0
+EP_MODEL_TFLOPS = 20.0
 
 
 def _skewed_counts(g: int, c: int, seed: int) -> np.ndarray:
@@ -356,6 +395,85 @@ def prefill_cell_accounting(name, model, b, chunk, prompt_len, bs, max_seq):
             cfg.n_layers * (rows_written + rows_streamed) * kv_row_bytes / 1e6, 4
         ),
     }
+
+
+def ep_chunk_cell_accounting(name, ep, spd, cap, d, f, chunk_counts, balanced):
+    """Deterministic columns of one chunked-EP cell: seeded routing draw,
+    per-chunk HBM/wire-byte model, and the analytic ``exposed_comm_ms``
+    pipeline schedule. Gated by ``--check``; the wall columns are not.
+    Raises if any chunked schedule fails to beat the single-shot one —
+    the overlap property itself is part of the gate."""
+    g = ep * spd
+    counts = (
+        np.full(g, cap, np.int64) if balanced else _skewed_counts(g, cap, seed=g * cap)
+    )
+    n_tok = int(counts.sum())
+    row_bytes = d * np.dtype(np.float32).itemsize
+    flop_per_row = 6 * d * f
+    bm = _tile(cap, BM)
+    # One all_to_all leg moves the full statically shaped exchange buffer:
+    # EP * SPD buckets of CAP rows per device. Chunking splits it exactly
+    # K ways (the per-chunk buffers are (EP, SPD/K * CAP, D)).
+    wire_total = g * cap * row_bytes
+
+    def leg_ms(nbytes):
+        return nbytes / (EP_WIRE_GBPS * 1e9) * 1e3
+
+    def compute_ms(nflop):
+        return nflop / (EP_MODEL_TFLOPS * 1e12) * 1e3
+
+    per_k = {}
+    exposed_by_k = {}
+    for kk in chunk_counts:
+        assert g % kk == 0, f"{name}: ep_chunks={kk} does not divide {g} groups"
+        gpc = g // kk
+        t_leg = leg_ms(wire_total / kk)
+        disp, comb, exec_gf, comp = [], [], [], []
+        for cc in range(kk):
+            cnts = counts[cc * gpc : (cc + 1) * gpc]
+            tok_c = int(cnts.sum())
+            ragged_c = sum(math.ceil(cnt / bm) * bm for cnt in cnts)
+            disp.append(round((tok_c + ragged_c) * row_bytes / 1e6, 4))
+            comb.append(round((ragged_c + tok_c) * row_bytes / 1e6, 4))
+            exec_gf.append(round(ragged_c * flop_per_row / 1e9, 4))
+            comp.append(compute_ms(ragged_c * flop_per_row))
+        # Pipeline schedule: chunk i's compute slot must cover chunk i-1's
+        # combine and chunk i+1's dispatch; the first dispatch and last
+        # combine have nothing to hide behind.
+        exposed = t_leg + t_leg
+        for i in range(kk):
+            net = (t_leg if i > 0 else 0.0) + (t_leg if i < kk - 1 else 0.0)
+            exposed += max(0.0, net - comp[i])
+        exposed_by_k[kk] = exposed
+        per_k[str(kk)] = {
+            "groups_per_chunk": gpc,
+            "wire_mb_per_chunk": round(wire_total / kk / 1e6, 4),
+            "exec_gflop": exec_gf,
+            "dispatch_hbm_mb": disp,
+            "combine_hbm_mb": comb,
+            "exposed_comm_ms": round(exposed, 6),
+        }
+    for kk, exp in exposed_by_k.items():
+        if kk > 1 and not exp < exposed_by_k[1]:
+            raise AssertionError(
+                f"{name}: exposed_comm_ms(K={kk})={exp:.6f} is not strictly "
+                f"below the single-shot baseline {exposed_by_k[1]:.6f} — the "
+                "chunked schedule stopped hiding the all_to_all legs"
+            )
+    meta = {
+        "shape": name,
+        "EP": ep,
+        "SPD": spd,
+        "CAP": cap,
+        "D": d,
+        "F": f,
+        "routing": "balanced" if balanced else "skewed",
+        "tokens_routed": n_tok,
+        "tokens_padded": g * cap,
+        "group_sizes": counts.tolist(),
+        "wire_mb_per_leg": round(wire_total / 1e6, 4),
+    }
+    return counts, meta, per_k
 
 
 def _time(fn, *args, iters: int = 20, warmup: int = 3) -> float:
@@ -677,6 +795,86 @@ def run_prefill(iters: int = 20, smoke_mode: bool = False) -> list[dict]:
     return rows
 
 
+def run_ep_chunk(iters: int = 20, smoke: bool = False) -> list[dict]:
+    """Chunked EP dispatch cells: the per-chunk fused row-FFN schedule the
+    pipelined ``ep_moe_shardmap`` runs between its all_to_all legs.
+
+    Parity first, and it is *bitwise*: the chunked path slices the
+    per-bucket offsets/counts of ONE global ``dispatch_metadata`` call, so
+    every bucket's rows, keep mask, and FP combine order are unchanged —
+    ``ep_chunks`` must be a pure schedule knob. ``wall_ms`` per K is the
+    measured chunked FFN (interpret semantics off-TPU, not gated);
+    ``exposed_comm_ms`` is the gated analytic schedule column."""
+    dtype = jnp.float32
+    rows = []
+    for name, ep, spd, cap, d, f, chunk_counts, balanced in (
+        EP_CHUNK_SMOKE_SHAPES if smoke else EP_CHUNK_SHAPES
+    ):
+        g = ep * spd
+        counts, meta, per_k = ep_chunk_cell_accounting(
+            name, ep, spd, cap, d, f, chunk_counts, balanced
+        )
+        n_tok = int(counts.sum())
+        ks = jax.random.split(jax.random.PRNGKey(zlib.crc32(name.encode())), 4)
+        ids = jnp.asarray(_ids_from_counts(counts))[:, None]
+        xt = jax.random.normal(ks[0], (n_tok, d), dtype)
+        wg = jax.random.normal(ks[1], (g, d, f), dtype) * 0.1
+        wu = jax.random.normal(ks[2], (g, d, f), dtype) * 0.1
+        wd = jax.random.normal(ks[3], (g, f, d), dtype) * 0.1
+        wt = jnp.ones(ids.shape, dtype)
+
+        def make_fn(kk):
+            gpc = g // kk
+
+            @jax.jit
+            def fn(xt, ids, wg, wu, wd):
+                row_ids, offsets, gs, slots, keep = dispatch_metadata(ids, g, cap)
+                rows_in = xt[row_ids]
+
+                def chunk_ffn(cc):
+                    ws = slice(cc * gpc, (cc + 1) * gpc)
+                    return expert_ffn_from_rows(
+                        rows_in, wg[ws], wu[ws], wd[ws], offsets[ws], gs[ws],
+                        capacity=cap, groups_per_weight=1, enabled=True,
+                        compact_out=True, fused=True,
+                    )
+
+                y = chunk_ffn(0)
+                if kk > 1:
+                    # Rows outside a chunk's buckets are unspecified in its
+                    # output — select each row from its owner chunk (same
+                    # merge as the chunked moe_esp fused branch).
+                    r_idx = jnp.arange(rows_in.shape[0], dtype=jnp.int32)
+                    owner = jnp.searchsorted(offsets, r_idx, side="right") - 1
+                    owner_c = jnp.clip(owner, 0, g - 1) // gpc
+                    for cc in range(1, kk):
+                        y = jnp.where((owner_c == cc)[:, None], chunk_ffn(cc), y)
+                return combine_from_rows(y, offsets[ids] + slots, keep, wt)
+
+            return fn
+
+        fns = {kk: make_fn(kk) for kk in chunk_counts}
+        base = np.asarray(fns[1](xt, ids, wg, wu, wd))
+        for kk in chunk_counts:
+            if kk == 1:
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(fns[kk](xt, ids, wg, wu, wd)), base,
+                err_msg=f"{name}: ep_chunks={kk} is not bit-identical to "
+                "the single-shot path",
+            )
+
+        chunks_out = {}
+        for kk in chunk_counts:
+            wall = _time(fns[kk], xt, ids, wg, wu, wd, iters=iters)
+            chunks_out[str(kk)] = {
+                "wall_ms": round(wall * 1e3, 3),
+                **per_k[str(kk)],
+            }
+        rows.append({**meta, "chunks": chunks_out})
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # baseline regression gate (--check)
 # ---------------------------------------------------------------------------
@@ -778,6 +976,39 @@ def check_baseline(baseline_path: str) -> list[str]:
         failures.append(
             f"prefill_shapes[{name}]: in baseline but no longer benchmarked"
         )
+
+    base_ec = {r.get("shape"): r for r in base.get("ep_chunk_shapes", [])}
+    expected = []
+    for name, ep, spd, cap, d, f, chunk_counts, balanced in EP_CHUNK_SHAPES:
+        expected.append(name)
+        _, meta, per_k = ep_chunk_cell_accounting(
+            name, ep, spd, cap, d, f, chunk_counts, balanced
+        )
+        row = base_ec.get(name)
+        if row is None:
+            failures.append(f"ep_chunk_shapes[{name}]: missing from baseline")
+            continue
+        for key, val in meta.items():
+            cmp(f"ep_chunk_shapes[{name}]", key, row.get(key), val)
+        base_chunks = row.get("chunks") or {}
+        for kk, acc in per_k.items():
+            crow = base_chunks.get(kk)
+            if crow is None:
+                failures.append(
+                    f"ep_chunk_shapes[{name}].chunks[{kk}]: missing from baseline"
+                )
+                continue
+            for key, val in acc.items():
+                cmp(f"ep_chunk_shapes[{name}].chunks[{kk}]", key, crow.get(key), val)
+        for kk in set(base_chunks) - set(per_k):
+            failures.append(
+                f"ep_chunk_shapes[{name}].chunks[{kk}]: in baseline but no "
+                "longer benchmarked"
+            )
+    for name in set(base_ec) - set(expected):
+        failures.append(
+            f"ep_chunk_shapes[{name}]: in baseline but no longer benchmarked"
+        )
     return failures
 
 
@@ -825,6 +1056,7 @@ def main() -> None:
         decode_rows = run_decode(iters=iters, smoke=args.smoke)
         migration_rows = run_migration(iters=iters, smoke=args.smoke)
         prefill_rows = run_prefill(iters=iters, smoke_mode=args.smoke)
+        ep_chunk_rows = run_ep_chunk(iters=iters, smoke=args.smoke)
     except AssertionError as e:  # parity failure must fail the gate loudly
         print(f"KERNEL PARITY FAILURE: {e}", file=sys.stderr)
         raise SystemExit(1)
@@ -871,14 +1103,26 @@ def main() -> None:
             "decode_stall_ticks and chunk_hbm_mb (KV bytes the lane "
             "writes + streams over one admission) are deterministic, and "
             "chunk_exposed_ms = wall(decode + live chunk) - wall(decode + "
-            "no-op chunk) is the per-tick interleave cost. The "
-            "deterministic columns are CI-gated: bench_kernels.py --check "
-            "BENCH_kernels.json recomputes them and fails on drift."
+            "no-op chunk) is the per-tick interleave cost. ep_chunk_shapes "
+            "measure the chunked EP dispatch pipeline "
+            "(ServeConfig(ep_chunks=K)): per-K bitwise parity of the "
+            "chunked fused row-FFN against the single-shot path, per-chunk "
+            "dispatch/combine HBM bytes (the K lists sum to the "
+            "single-shot columns — per-chunk offset slices keep both legs "
+            "compact), per-chunk exchange wire bytes, and exposed_comm_ms "
+            "— the analytic schedule's wall(step) - wall(overlapped "
+            "ideal) at the fixed EP_WIRE_GBPS/EP_MODEL_TFLOPS model point "
+            "(K=1 = the two synchronous all_to_all walls; every K>1 must "
+            "be strictly below it, asserted at generation AND re-checked "
+            "by --check). The deterministic columns are CI-gated: "
+            "bench_kernels.py --check BENCH_kernels.json recomputes them "
+            "and fails on drift."
         ),
         "shapes": rows,
         "decode_shapes": decode_rows,
         "migration_shapes": migration_rows,
         "prefill_shapes": prefill_rows,
+        "ep_chunk_shapes": ep_chunk_rows,
     }
     if args.smoke:
         print(json.dumps(doc, indent=2))

@@ -328,6 +328,18 @@ def expert_ffn_from_rows(
     touches HBM. Shape-gated by ``can_gmm_fused`` (the gather/scatter gates
     plus a VMEM bound on the model dim); ineligible shapes fall back to the
     two-kernel gather+scatter pair, then to the reference math.
+
+    Per-chunk invocation (``ep_chunks > 1``): the chunked EP dispatch
+    pipeline calls this once per chunk with *sliced* metadata and weights —
+    the chunk's buckets' ``offsets``/``group_sizes`` rows and the matching
+    weight-row slice — while ``x`` stays the full flat row array (chunk
+    receive buffer on the mesh path, the whole compacted stream on the
+    no-mesh path). Offsets index into ``x`` as usual; rows owned by buckets
+    outside the slice are untouched/unspecified in the output and the
+    caller selects each row from its owner chunk before the single final
+    combine. The fallback chain above applies per chunk, so a shape that
+    loses kernel eligibility after slicing degrades transparently for that
+    chunk alone.
     """
     d = x.shape[-1]
     f = wg.shape[-1]

@@ -50,6 +50,12 @@ def main():
         "--pool-pages", type=int, default=None,
         help="oversubscribe the page pool (default: fully backed)",
     )
+    ap.add_argument(
+        "--ep-chunks", type=int, default=1,
+        help="pipeline the EP dispatch/combine all_to_all legs against the "
+        "fused expert FFN in this many expert-group chunks (must divide "
+        "slots-per-device; 1 = single-shot dispatch)",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -80,6 +86,7 @@ def main():
         paged=args.paged,
         page_size=args.page_size,
         pool_pages=args.pool_pages,
+        ep_chunks=args.ep_chunks,
     )
     cm = mesh if mesh is not None else _null()
     with cm:

@@ -34,6 +34,7 @@ from repro.parallel.collectives import (
     kept_counts,
     tiled_placement,
     uniform_placement,
+    validate_ep_chunks,
 )
 from repro.parallel.ctx import ParallelCtx
 from repro.parallel.placement import PlacementTable
@@ -132,6 +133,12 @@ def moe_esp(
     b, s, d = x.shape
     k = cfg.experts_per_token
     e = cfg.n_experts
+    # Validate up front so a bad chunk count fails loudly on every branch;
+    # only the no-mesh fused branch below actually pipelines (the padded /
+    # meshed layouts keep the single-shot grouped FFN).
+    kc = validate_ep_chunks(getattr(ctx, "ep_chunks", 1), where="moe_esp")
+    if kc > 1:
+        validate_ep_chunks(kc, e, where="moe_esp n_experts")
     groups = ctx.n_batch if (ctx.mesh is not None and b % ctx.n_batch == 0) else 1
     n_loc = (b // groups) * s
     cap = bucket_capacity(n_loc, k, ctx.capacity_factor, e)
@@ -155,18 +162,41 @@ def moe_esp(
         ids2 = ids.reshape(b * s, k)
         row_ids, offsets, counts, slots, keep = dispatch_metadata(ids2, e, cap)
         rows = x.reshape(b * s, d)[row_ids]
-        y = registry.expert_ffn_from_rows(
-            rows,
-            p["w_gate"],
-            p["w_up"],
-            p["w_down"],
-            offsets,
-            counts,
-            capacity=cap,
-            enabled=True,
-            compact_out=True,
-            fused=True,
-        )
+        # ep_chunks on the no-mesh path: split the experts into kc chunks
+        # and run the fused row FFN per chunk over sliced offsets/counts/
+        # weights — the offsets stay absolute into the one flat rows array,
+        # so each chunk's call writes its buckets' segments at the same
+        # coordinates the single-shot call would. The chunk outputs are
+        # merged by each row's owning expert chunk (a select, no
+        # arithmetic), and the ONE combine below is untouched — the result
+        # is bit-identical to ep_chunks=1.
+        epc = e // kc
+
+        def chunk_ffn(c):
+            ws = slice(c * epc, (c + 1) * epc)
+            return registry.expert_ffn_from_rows(
+                rows,
+                p["w_gate"][ws],
+                p["w_up"][ws],
+                p["w_down"][ws],
+                offsets[ws],
+                counts[ws],
+                capacity=cap,
+                enabled=True,
+                compact_out=True,
+                fused=True,
+            )
+
+        y = chunk_ffn(0)
+        if kc > 1:
+            # Owning bucket of each compacted row (offsets are the buckets'
+            # first rows); rows past the live span — sentinel copies — map
+            # to the last chunk and are never addressed by the combine.
+            r_idx = jnp.arange(rows.shape[0], dtype=jnp.int32)
+            owner = jnp.searchsorted(offsets, r_idx, side="right") - 1
+            owner_c = jnp.clip(owner, 0, e - 1) // epc
+            for c in range(1, kc):
+                y = jnp.where((owner_c == c)[:, None], chunk_ffn(c), y)
         out = combine_from_rows(
             y, offsets[ids2] + slots, keep, w.reshape(b * s, k)
         )

@@ -265,6 +265,34 @@ def validate_ep_token_split(
         )
 
 
+def validate_ep_chunks(ep_chunks, n_groups: int | None = None, where: str = "") -> int:
+    """Validate the EP dispatch chunk count with a named error.
+
+    ``ep_chunks`` must be a positive int; when ``n_groups`` (the expert-group
+    count the chunking splits — ``slots_per_device`` on the mesh path, the
+    total slot count on the local path, ``n_experts`` for ESP) is known it
+    must divide it, or per-chunk buckets would be ragged across chunks and
+    the shard_map/jit shapes would differ per chunk. Failing here names the
+    offending values instead of dying inside shard_map with an opaque spec
+    error. ``ep_chunks=1`` is always valid and means the single-shot path.
+    Returns the validated count."""
+    at = f" ({where})" if where else ""
+    if not isinstance(ep_chunks, int) or isinstance(ep_chunks, bool) or ep_chunks < 1:
+        raise ValueError(
+            f"ep_chunks={ep_chunks!r}{at} must be a positive int "
+            f"(1 = single-shot dispatch, K > 1 pipelines the all_to_all "
+            f"legs in K expert-group chunks)"
+        )
+    if n_groups is not None and n_groups % ep_chunks:
+        raise ValueError(
+            f"ep_chunks={ep_chunks}{at} does not divide the expert-group "
+            f"count {n_groups} — every chunk must carry the same number of "
+            f"expert groups so the exchange buffers stay statically shaped; "
+            f"pick a divisor of {n_groups} (or 1 for the single-shot path)"
+        )
+    return ep_chunks
+
+
 def ep_moe_shardmap(
     x: jax.Array,                 # (B, S, d) — seq will be split over model axis
     expert_ids: jax.Array,        # (B, S, k)
@@ -321,31 +349,54 @@ def ep_moe_shardmap(
         cap, d, f, registry.default_interpret()
     )
     spd = slots_per_device
+    # EP dispatch pipelining (ctx.ep_chunks = K): the fused branch splits
+    # each device's spd expert groups into K chunks of spc groups and
+    # pipelines the per-chunk all_to_all legs against the per-chunk FFN.
+    # Validated up front with a named error; the padded fallback branch
+    # stays single-shot (its buffers are already the slow path).
+    kc = validate_ep_chunks(
+        getattr(ctx, "ep_chunks", 1), where="ep_moe_shardmap"
+    )
+    if kc > 1:
+        validate_ep_chunks(kc, spd, where="ep_moe_shardmap slots_per_device")
+    if not fused:
+        kc = 1
+    spc = spd // kc
 
     def dispatch_fused(xt, slots):
-        """Rank-compacted send buffer + per-bucket metadata (no padding
-        between a rank's buckets; bucket order within a rank preserved).
-        ``dest``/``posr`` — each copy's destination rank and row inside
-        that rank's compacted block — also address the copy's row in the
-        *returned* compact FFN output (the scatter epilogue writes results
-        at the same offsets the prologue gathered from), so the combine
-        gathers through them directly."""
+        """Per-chunk rank-compacted send buffers + per-bucket metadata (no
+        padding between a chunk's buckets; bucket order within a rank
+        preserved). ``dest``/``posr`` — each copy's destination rank and
+        row inside that rank's compacted *chunk* block — also address the
+        copy's row in the returned compact FFN output (the scatter epilogue
+        writes results at the same offsets the prologue gathered from), so
+        the combine gathers through them directly. The chunk split is
+        metadata-only: a bucket's fill and internal order are per-bucket
+        properties of the one global ``dispatch_metadata`` call, so slicing
+        buckets by chunk changes nothing about any bucket's rows — no
+        padded buffer reappears on either leg."""
         n = xt.shape[0]
         _, _, kept, pos, keep = dispatch_metadata(slots, total_slots, cap)
-        kept_rk = kept.reshape(ep, spd)
-        # Within-rank row offset of each bucket (exclusive cumsum over the
-        # rank's buckets).
-        wro = jnp.cumsum(kept_rk, axis=1) - kept_rk           # (ep, spd)
+        # Within-segment row offset of each bucket: exclusive cumsum
+        # restarting at every (rank, chunk) boundary. kc == 1 degenerates
+        # to the whole-rank cumsum of the single-shot path.
+        kept_ck = kept.reshape(ep, kc, spc)
+        wro = jnp.cumsum(kept_ck, axis=2) - kept_ck           # (ep, kc, spc)
         flat_b = slots.reshape(-1)
         safe_b = jnp.minimum(flat_b, total_slots - 1)
         dest = flat_b // spd                                  # >= ep for sentinels
+        chunk_of = (safe_b % spd) // spc                      # owning chunk
         posr = wro.reshape(-1)[safe_b] + pos.reshape(-1)
-        posr = jnp.where(keep.reshape(-1), posr, spd * cap)   # overflow -> drop
-        send = jnp.zeros((ep, spd * cap, d), dtype=xt.dtype)
-        send = send.at[dest, posr].set(
-            xt[jnp.repeat(jnp.arange(n), k)], mode="drop"
-        )
-        return send, kept_rk, pos, keep, dest, posr
+        posr = jnp.where(keep.reshape(-1), posr, spc * cap)   # overflow -> drop
+        src = xt[jnp.repeat(jnp.arange(n), k)]
+        sends = []
+        for c in range(kc):
+            # Copies owned by other chunks scatter out of bounds and drop —
+            # each kept copy lands in exactly one chunk's buffer.
+            posr_c = jnp.where(chunk_of == c, posr, spc * cap)
+            send = jnp.zeros((ep, spc * cap, d), dtype=xt.dtype)
+            sends.append(send.at[dest, posr_c].set(src, mode="drop"))
+        return sends, kept_ck, keep, chunk_of, dest, posr
 
     def body(x_blk, eid_blk, w_blk, wg, wu, wd, slot_of_, n_rep_):
         # x_blk: (B_loc, S_loc, d) — this device's token slice.
@@ -365,53 +416,81 @@ def ep_moe_shardmap(
             slots = jnp.where(owned[:, None], slots, total_slots + 1)
 
         if fused:
-            send, kept_rk, pos, keep, dest, posr = dispatch_fused(xt, slots)
-            recv = jax.lax.all_to_all(
-                send, axis, split_axis=0, concat_axis=0, tiled=False
+            sends, kept_ck, keep, chunk_of, dest, posr = dispatch_fused(xt, slots)
+
+            def exchange(c):
+                recv = jax.lax.all_to_all(
+                    sends[c], axis, split_axis=0, concat_axis=0, tiled=False
+                )
+                cnt = jax.lax.all_to_all(
+                    kept_ck[:, c], axis, split_axis=0, concat_axis=0, tiled=False
+                )
+                return recv, cnt
+
+            def chunk_ffn(recv, cnt, c):
+                # recv[r'] = my chunk's spc buckets' rows from source rank
+                # r', bucket-compacted; cnt[r', s] = that segment's fill.
+                roff = jnp.cumsum(cnt, axis=1) - cnt          # (ep, spc)
+                # Group gi = s*ep + r' (weight row = gi // ep, as the
+                # padded layout) -> flat row offset r'*spc*cap + roff.
+                base = jnp.arange(ep, dtype=jnp.int32)[:, None] * (spc * cap)
+                offsets_g = (roff + base).transpose(1, 0).reshape(-1)
+                counts_g = cnt.transpose(1, 0).reshape(-1)
+                # compact_out: the scatter epilogue writes the down-
+                # projection back at offsets_g, so the flat (ep*spc*cap, d)
+                # result IS the return exchange buffer — segment r' goes
+                # straight back to source rank r', still bucket-compacted
+                # in *my* bucket order. fused=True: one kernel when
+                # can_gmm_fused accepts the shapes; the registry falls back
+                # to the gather+scatter pair (same layout contract) per
+                # chunk when it doesn't.
+                ws = slice(c * spc, (c + 1) * spc)
+                y = registry.expert_ffn_from_rows(
+                    recv.reshape(ep * spc * cap, d),
+                    wg[ws],
+                    wu[ws],
+                    wd[ws],
+                    offsets_g,
+                    counts_g,
+                    capacity=cap,
+                    groups_per_weight=ep,
+                    enabled=True,
+                    compact_out=True,
+                    fused=True,
+                )
+                return jax.lax.all_to_all(
+                    y.reshape(ep, spc * cap, d), axis,
+                    split_axis=0, concat_axis=0, tiled=False,
+                )
+
+            # Software pipeline over the chunks (trace-unrolled): chunk
+            # c+1's dispatch all_to_all is issued *before* chunk c's FFN,
+            # and chunk c's combine all_to_all right after it — neither
+            # depends on the other's data, so async collectives run the
+            # in-flight legs while gmm_fused_ffn executes. Double-buffer
+            # contract: at most two receive buffers are live at once (the
+            # chunk being computed and the one in flight). kc == 1 is the
+            # original single-shot dispatch -> FFN -> combine sequence.
+            recv = [None] * kc
+            recv[0] = exchange(0)
+            backs = []
+            for c in range(kc):
+                if c + 1 < kc:
+                    recv[c + 1] = exchange(c + 1)
+                backs.append(chunk_ffn(*recv[c], c))
+                recv[c] = None                    # retire chunk c's buffer
+            # ONE combine over the concatenated chunk outputs: each copy's
+            # row is its chunk's block base + dest*(spc*cap) + posr — the
+            # exact coordinates dispatch_fused scattered it to on the way
+            # out. A single gather + einsum keeps the per-token k-copy
+            # reduction order identical to the single-shot path (bit-
+            # exactness); per-chunk partial combines would re-order it.
+            back = jnp.concatenate(backs, axis=0)
+            rows = chunk_of * (ep * spc * cap) + dest * (spc * cap) + posr
+            out = combine_from_rows(
+                back.reshape(kc * ep * spc * cap, d),
+                rows.reshape(bl * sl, k), keep, w,
             )
-            cnt = jax.lax.all_to_all(
-                kept_rk, axis, split_axis=0, concat_axis=0, tiled=False
-            )
-            # recv[r'] = my spd buckets' rows from source rank r', bucket-
-            # compacted; cnt[r', s] = that segment's per-bucket fill.
-            roff = jnp.cumsum(cnt, axis=1) - cnt              # (ep, spd)
-            # Group gi = s*ep + r' (weight row = gi // ep, as the padded
-            # layout) -> flat row offset r'*spd*cap + roff[r', s].
-            base = jnp.arange(ep, dtype=jnp.int32)[:, None] * (spd * cap)
-            offsets_g = (roff + base).transpose(1, 0).reshape(-1)
-            counts_g = cnt.transpose(1, 0).reshape(-1)
-            # compact_out: the scatter epilogue writes the down-projection
-            # back at offsets_g, so the flat (ep*spd*cap, d) result IS the
-            # return exchange buffer — segment r' goes straight back to
-            # source rank r', still bucket-compacted in *my* bucket order.
-            # No padded FFN output, no (spd, ep, cap, d) repack, and the
-            # receive side reads only live rows through dest/posr.
-            # fused=True: when can_gmm_fused accepts the shapes all three
-            # matmuls run as ONE kernel and the (G, cap, F) hidden tensor
-            # stays in VMEM — the registry falls back to the gather+scatter
-            # pair (same layout contract) when it doesn't.
-            y = registry.expert_ffn_from_rows(
-                recv.reshape(ep * spd * cap, d),
-                wg,
-                wu,
-                wd,
-                offsets_g,
-                counts_g,
-                capacity=cap,
-                groups_per_weight=ep,
-                enabled=True,
-                compact_out=True,
-                fused=True,
-            )
-            back = jax.lax.all_to_all(
-                y.reshape(ep, spd * cap, d), axis,
-                split_axis=0, concat_axis=0, tiled=False,
-            )
-            # back[j] = rank j's compact outputs for my copies; each copy's
-            # row is dest*spd*cap + posr — the exact coordinates
-            # dispatch_fused scattered it to on the way out.
-            rows = (dest * (spd * cap) + posr).reshape(bl * sl, k)
-            out = combine_from_rows(back.reshape(ep * spd * cap, d), rows, keep, w)
         else:
             bufs, pos, keep = bucket_dispatch(xt, slots, total_slots, cap)
             # How full each outgoing bucket actually is — rides the same
@@ -510,14 +589,27 @@ def ep_moe_local(
     slots = choose_slots(eid, slot_of, n_replicas, sentinel=total_slots + 1)
     bufs, pos, keep = bucket_dispatch(xt, slots, total_slots, cap)
     counts = kept_counts(slots, keep, total_slots)
-    y = registry.expert_ffn(
-        bufs,
-        slot_weights["w_gate"],
-        slot_weights["w_up"],
-        slot_weights["w_down"],
-        group_sizes=counts,
-        enabled=ctx.kernels_on,
-    )
+    # ep_chunks: the local path has no all_to_all to hide, but it is the
+    # substrate the virtual-EP serving/chaos tests run on — chunking the
+    # grouped FFN the same way keeps the chunked program on the hot path
+    # there (per-bucket results are independent of how groups are batched,
+    # so the concatenated output is bit-identical to the single call).
+    kc = validate_ep_chunks(getattr(ctx, "ep_chunks", 1), where="ep_moe_local")
+    if kc > 1:
+        validate_ep_chunks(kc, total_slots, where="ep_moe_local total_slots")
+    spt = total_slots // kc
+    ys = [
+        registry.expert_ffn(
+            bufs[c * spt : (c + 1) * spt],
+            slot_weights["w_gate"][c * spt : (c + 1) * spt],
+            slot_weights["w_up"][c * spt : (c + 1) * spt],
+            slot_weights["w_down"][c * spt : (c + 1) * spt],
+            group_sizes=counts[c * spt : (c + 1) * spt],
+            enabled=ctx.kernels_on,
+        )
+        for c in range(kc)
+    ]
+    y = ys[0] if kc == 1 else jnp.concatenate(ys, axis=0)
     out = bucket_combine(y, slots, pos, keep, w)
     return out.reshape(b, s, d)
 

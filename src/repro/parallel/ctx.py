@@ -44,6 +44,12 @@ class ParallelCtx:
     # mode off-TPU — exact but slow, for tests); False keeps the einsum
     # reference paths.
     use_kernels: str | bool = "auto"
+    # EP dispatch pipelining: split each device's expert groups into this
+    # many chunks and pipeline the all_to_all legs against the fused FFN
+    # (chunk i's combine and chunk i+1's dispatch in flight while chunk i
+    # computes). 1 = the single-shot path. Must divide the per-device
+    # expert-group count (collectives.validate_ep_chunks).
+    ep_chunks: int = 1
 
     @property
     def seq_spec(self):

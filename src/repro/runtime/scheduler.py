@@ -582,6 +582,9 @@ class RequestScheduler:
             "queue_depth": len(self.queue),
             "prefill_backlog": backlog,
             "n_preempted": self.n_preempted,
+            # Static dispatch-pipeline depth of the step program (ops
+            # visibility: 1 = single-shot EP dispatch, K = chunked overlap).
+            "ep_chunks": self.server.scfg.ep_chunks,
             "max_ttft_ticks": max(ttfts, default=None),
             "max_stall_ticks": max(
                 (r.max_stall for r in self.requests), default=0

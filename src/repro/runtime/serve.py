@@ -53,6 +53,7 @@ from repro.core.ni_balancer import (
 )
 from repro.models import attention as A
 from repro.models import transformer as T
+from repro.parallel.collectives import validate_ep_chunks
 from repro.parallel.ctx import ParallelCtx
 from repro.parallel.placement import PlacementTable
 from repro.runtime.migration_driver import MOE_WEIGHTS, MigrationDriver
@@ -95,11 +96,28 @@ class ServeConfig:
     # the cache). Requires paged=True and full (non-windowed) attention;
     # must be a positive multiple of page_size no larger than max_seq.
     prefill_chunk: int | None = None
+    # Chunked EP dispatch: split each device's expert groups into this many
+    # chunks and pipeline the dispatch/combine all_to_all legs against the
+    # fused expert FFN (collectives.ep_moe_shardmap; the virtual-EP local
+    # path chunks the grouped FFN the same way). 1 = single-shot dispatch.
+    # Must divide the expert-group count: slots_per_device on a mesh,
+    # slots_per_device * virtual_ep on the single-process path. Static —
+    # baked into the one compiled step program, never a traced switch.
+    ep_chunks: int = 1
 
     def __post_init__(self):
         validate_prefill_chunk(
             self.prefill_chunk, self.page_size, self.max_seq, self.paged
         )
+        validate_ep_chunks(self.ep_chunks, where="ServeConfig")
+        if self.ep_chunks > 1:
+            groups = self.slots_per_device * (self.virtual_ep or 1)
+            validate_ep_chunks(
+                self.ep_chunks,
+                groups,
+                where="ServeConfig slots_per_device"
+                + (" * virtual_ep" if self.virtual_ep else ""),
+            )
 
 
 def validate_prefill_chunk(
@@ -202,6 +220,11 @@ class Server:
         table: PlacementTable | None = None,
     ):
         self.cfg = cfg
+        if serve_cfg.ep_chunks != getattr(ctx, "ep_chunks", 1):
+            # Static pipeline depth: the chunk count is baked into the
+            # jitted step closures built below (one compiled program, no
+            # traced switch), so it must land on the ctx first.
+            ctx = dataclasses.replace(ctx, ep_chunks=serve_cfg.ep_chunks)
         self.ctx = ctx
         self.scfg = serve_cfg
         self.params = params

@@ -232,7 +232,7 @@ def test_nan_fault_fails_only_affected_request():
 # ---------------------------------------------------------------------------
 
 def _chaos_run(seed, n_requests=4, max_new=7, skew_router=False,
-               prefill_chunk=None):
+               prefill_chunk=None, ep_chunks=1):
     cfg = _moe_cfg()
     params = T.init_params(RNG, cfg)
     if skew_router:
@@ -255,7 +255,7 @@ def _chaos_run(seed, n_requests=4, max_new=7, skew_router=False,
     expected[0] = ref[0][:cut]
 
     srv = _server(cfg, params, batch=3, pool_pages=10, alpha=0.1,
-                  prefill_chunk=prefill_chunk, **moe_kw)
+                  prefill_chunk=prefill_chunk, ep_chunks=ep_chunks, **moe_kw)
     # poison slot 0: admission always picks the lowest free slot, so slot 0
     # is the one guaranteed to hold a live request mid-run
     plan = FaultPlan.chaos(seed, n_steps=12, n_devices=4, pressure_pages=5,
@@ -295,10 +295,28 @@ def test_chaos_parity_with_concurrent_migration_stream():
     srv.table.check()
 
 
+def test_chaos_parity_chunked_dispatch():
+    """The chunked EP dispatch pipeline (ep_chunks=3 over the 12 virtual
+    expert groups) under the full chaos plan — device death mid-stream,
+    pool pressure, NaN faults, preemption and recompute: every stream must
+    stay bit-identical to the *unchunked* sequential fault-free oracle,
+    because chunking is a schedule, not a numerical change."""
+    sched = _chaos_run(seed=14, ep_chunks=3)
+    assert sched.n_preempted > 0
+    assert sched.server.scfg.ep_chunks == 3
+    assert sched.stats()["ep_chunks"] == 3   # ops visibility
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("seed", [11, 23, 47])
 def test_chaos_parity_moe_seeds(seed):
     _chaos_run(seed, n_requests=6, max_new=10)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("ep_chunks", [2, 4])
+def test_chaos_parity_chunked_dispatch_depths(ep_chunks):
+    _chaos_run(seed=23, ep_chunks=ep_chunks)
 
 
 # ---------------------------------------------------------------------------
